@@ -1,0 +1,199 @@
+"""Reproductions of the paper's tables/figures, one function per artifact.
+
+  fig4   — GNN training curve (188k params, lr 0.01, 10 steps, ~99% acc)
+  table2 — 46-node 4-task allocation (disjoint groups, memory-feasible)
+  fig8   — 4-model comm/compute time: Hulk vs Systems A/B/C
+  fig10  — 6-model comparison (gap widens with more tasks)
+
+Wall-times come from the calibrated cost model over the paper's latency
+table (the fleet itself is private — DESIGN.md SS3); the reproduction
+target is the RELATIVE improvement (>20% vs the best baseline).
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import cost_model as cm
+from repro.core import gnn, labels as labels_mod, train as gnn_train
+from repro.core.graph import paper_fig1_graph, paper_fleet46
+
+
+def _trained(tasks, seed=0, steps=30, extra_graphs=4):
+    cfg = gnn_train.gnn_config_for(tasks)
+    ds = gnn_train.make_dataset(extra_graphs, tasks, n_nodes=46, seed=seed + 1,
+                                label_frac=0.8)
+    ds.append(gnn_train.make_example(paper_fleet46(), tasks, seed=seed))
+    params, hist = gnn_train.train_gnn(cfg, ds, steps=steps, lr=0.01)
+    return params, cfg, hist
+
+
+def fig4_gnn_training() -> dict:
+    """Paper Fig. 4: 10 steps, lr 0.01, ~188k params, accuracy -> ~99%."""
+    tasks = cm.FOUR_TASKS
+    cfg = gnn_train.gnn_config_for(tasks)
+    example = gnn_train.make_example(paper_fig1_graph(), tasks, seed=0,
+                                     label_frac=1.0)
+    params0 = gnn.init(__import__("jax").random.PRNGKey(0), cfg,
+                       example.feats.shape[1])
+    n_par = gnn.n_params(params0)
+    params, hist = gnn_train.train_gnn(cfg, [example], steps=10, lr=0.01,
+                                       params=params0)
+    return {"artifact": "fig4", "n_params": n_par,
+            "history": hist,
+            "final_accuracy": hist[-1]["accuracy"],
+            "derived": f"acc@10={hist[-1]['accuracy']:.3f}"}
+
+
+def table2_allocation() -> dict:
+    """Paper Table 2: 46 nodes split across OPT/T5/GPT-2/BERT."""
+    tasks = cm.FOUR_TASKS
+    params, cfg, _ = _trained(tasks)
+    from repro.core import assign as assign_mod
+    fleet = paper_fleet46()
+    assignment = assign_mod.task_assignments(fleet, tasks, params, cfg)
+    groups = assignment.groups
+    sizes = {k: len(v) for k, v in groups.items()}
+    mem = fleet.memory_gb()
+    feasible = {t.name: bool(sum(mem[i] for i in groups.get(t.name, []))
+                             >= t.min_memory_gb) for t in tasks}
+    all_ids = [i for ids in groups.values() for i in ids]
+    return {"artifact": "table2", "groups": {k: v for k, v in groups.items()},
+            "sizes": sizes, "feasible": feasible,
+            "disjoint": len(all_ids) == len(set(all_ids)),
+            "idle": fleet.n - len(all_ids),
+            "derived": f"assigned={len(all_ids)}/46 idle={fleet.n - len(all_ids)}"}
+
+
+def _compare(tasks, comm_model="paper") -> dict:
+    params, cfg, _ = _trained(tasks)
+    fleet = paper_fleet46()
+    rows = bl.compare_all(fleet, tasks, params, cfg, comm_model)
+    out = {}
+    for name in ("Hulk", "SystemA", "SystemB", "SystemC"):
+        r = rows[name]
+        out[name] = {"comm_s": float(r["comm"]), "compute_s": float(r["compute"]),
+                     "total_s": float(r["total"])}
+    out["improvement_vs_best_baseline"] = float(
+        rows["improvement_vs_best_baseline"])
+    return out
+
+
+def fig8_four_models() -> dict:
+    res = _compare(cm.FOUR_TASKS)
+    return {"artifact": "fig8", **res,
+            "derived": f"improvement={res['improvement_vs_best_baseline']:.1%}"}
+
+
+def fig10_six_models() -> dict:
+    res = _compare(cm.SIX_TASKS)
+    return {"artifact": "fig10", **res,
+            "derived": f"improvement={res['improvement_vs_best_baseline']:.1%}"}
+
+
+def alpha_beta_check() -> dict:
+    """Beyond-paper: the same comparison under the alpha-beta comm model."""
+    res = _compare(cm.FOUR_TASKS, comm_model="alphabeta")
+    return {"artifact": "alpha_beta_check", **res,
+            "derived": f"improvement={res['improvement_vs_best_baseline']:.1%}"}
+
+
+ALL = [fig4_gnn_training, table2_allocation, fig8_four_models,
+       fig10_six_models, alpha_beta_check]
+
+
+def edge_pooling_ablation() -> dict:
+    """Beyond-paper ablation of the paper's core ML contribution: the
+    edge-pooling layer (Eq. 4). Train the same GCN with latency edges
+    zeroed out (topology only) vs full edge pooling; compare node accuracy
+    and the realized placement makespan on held-out fleets."""
+    import numpy as np
+    from repro.core.graph import random_fleet
+
+    tasks = cm.FOUR_TASKS
+    cfg = gnn_train.gnn_config_for(tasks)
+    train_ds = gnn_train.make_dataset(5, tasks, n_nodes=40, seed=11,
+                                      label_frac=0.8)
+    # ablated dataset: same labels, latency adjacency binarized (edge
+    # weights carry no information beyond connectivity)
+    import dataclasses as _dc
+    abl_ds = [gnn_train.GraphExample(
+        ex.feats, (ex.lat > 0).astype(np.float32), ex.labels, ex.mask)
+        for ex in train_ds]
+
+    params_full, hist_full = gnn_train.train_gnn(cfg, train_ds, steps=25,
+                                                 lr=0.01, seed=5)
+    params_abl, hist_abl = gnn_train.train_gnn(cfg, abl_ds, steps=25,
+                                               lr=0.01, seed=5)
+
+    # held-out fleets: compare realized makespans of Algorithm 1 placements
+    from repro.core import assign as assign_mod
+    wins, ties = 0, 0
+    ratios = []
+    for s in range(6):
+        fleet = random_fleet(40, seed=500 + s)
+        comm = cm.make_comm(fleet, "alphabeta")
+
+        def mk(params):
+            try:
+                a = assign_mod.task_assignments(fleet, tasks, params, cfg)
+            except assign_mod.PlacementError:
+                return np.inf
+            return cm.placement_makespan(fleet, a.groups, tasks,
+                                         comm)["makespan"]
+
+        m_full, m_abl = mk(params_full), mk(params_abl)
+        if np.isfinite(m_full) and np.isfinite(m_abl):
+            ratios.append(m_abl / m_full)
+            wins += m_full < m_abl * 0.999
+            ties += abs(m_full - m_abl) <= m_abl * 1e-3
+    med = float(np.median(ratios)) if ratios else float("nan")
+    return {"artifact": "edge_pooling_ablation",
+            "acc_full": hist_full[-1]["accuracy"],
+            "acc_ablated": hist_abl[-1]["accuracy"],
+            "median_makespan_ratio_ablated_over_full": med,
+            "fleets_where_full_wins": wins, "ties": ties,
+            "derived": (f"acc {hist_abl[-1]['accuracy']:.2f}->"
+                        f"{hist_full[-1]['accuracy']:.2f} w/ edges; "
+                        f"ablated/full makespan x{med:.2f}")}
+
+
+def thousand_node_scale() -> dict:
+    """Scale demonstration: the Hulk control plane (graph build + GNN
+    inference + Algorithm 1 + repair) on a 1024-machine fleet — placement
+    decisions stay sub-minute at 4x the paper's fleet squared."""
+    import time
+    import numpy as np
+    from repro.core import assign as assign_mod
+    from repro.core.graph import random_fleet
+
+    tasks = cm.SIX_TASKS
+    cfg = gnn_train.gnn_config_for(tasks)
+    ds = gnn_train.make_dataset(3, tasks, n_nodes=48, seed=21,
+                                label_frac=0.8)
+    params, _ = gnn_train.train_gnn(cfg, ds, steps=15, lr=0.01)
+
+    t0 = time.time()
+    fleet = random_fleet(1024, seed=7)
+    t_build = time.time() - t0
+    t0 = time.time()
+    a = assign_mod.task_assignments(fleet, tasks, params, cfg)
+    t_assign = time.time() - t0
+    placed = sum(len(v) for v in a.groups.values())
+    # invariants at scale
+    mem = fleet.memory_gb()
+    by_name = {t.name: t for t in tasks}
+    for name, ids in a.groups.items():
+        assert sum(mem[i] for i in ids) >= by_name[name].min_memory_gb
+    all_ids = [i for ids in a.groups.values() for i in ids]
+    assert len(all_ids) == len(set(all_ids))
+    return {"artifact": "thousand_node_scale", "n_machines": 1024,
+            "graph_build_s": round(t_build, 1),
+            "assign_s": round(t_assign, 1),
+            "machines_placed": placed, "deferred": a.deferred,
+            "derived": f"1024 nodes: assign={t_assign:.1f}s placed={placed}"}
+
+
+ALL = ALL + [edge_pooling_ablation, thousand_node_scale]

@@ -1,0 +1,101 @@
+"""SSPerf hillclimb driver: one (arch x shape) cell, one iteration.
+
+Runs the dry-run lowering with the CURRENT code + knobs, reports the three
+roofline terms, the bytes-by-kind breakdown, and (optionally) the
+Pallas-flash estimate where attention-score tensors are VMEM-resident.
+Appends a JSON line to benchmarks/perf_log.jsonl so the iteration history
+is machine-readable.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter --arch qwen3-32b \
+        --shape train_4k --tag H1-bf16-boundary --flash-estimate
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import sys
+import time
+
+
+def flash_pred(q_chunk: int, seq: int):
+    """Score-tensor shapes (kept VMEM-resident by the Pallas flash kernel):
+    rank-4 float (scores/probs (B,H,bq,T)) or rank-3 f32 (the same with a
+    collapsed singleton head dim / transposed grads) with one dim ==
+    q_chunk and one == full seq — or two seq dims (unchunked path).
+    Activations are bf16, scores f32, so rank-3 is restricted to f32."""
+    def pred(dtype, dims):
+        if len(dims) == 4 and dtype in ("f32", "bf16"):
+            return ((q_chunk in dims and seq in dims and q_chunk != seq)
+                    or dims.count(seq) >= 2)
+        if len(dims) == 3 and dtype == "f32":
+            return ((q_chunk in dims and seq in dims and q_chunk != seq)
+                    or dims.count(seq) >= 2)
+        return False
+    return pred
+
+
+def main(argv=None):
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.analysis import hlo_cost
+    from repro.analysis.roofline import roofline_report
+    from repro.configs import SHAPES
+    from repro.launch.dryrun import run_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--flash-estimate", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=256)
+    ap.add_argument("--ssm-chunk", type=int, default=256)
+    ap.add_argument("--mlstm-chunk", type=int, default=256)
+    ap.add_argument("--moe-chunk", type=int, default=0)
+    ap.add_argument("--remat-policy", default="",
+                    choices=["", "nothing", "outputs"])
+    ap.add_argument("--moe-bf16-combine", action="store_true")
+    ap.add_argument("--moe-capacity-factor", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    knobs = {"q_chunk": args.q_chunk, "ssm_chunk": args.ssm_chunk,
+             "mlstm_chunk": args.mlstm_chunk, "moe_chunk": args.moe_chunk,
+             "remat_policy": args.remat_policy,
+             "moe_combine_bf16": args.moe_bf16_combine,
+             "moe_capacity_factor": args.moe_capacity_factor}
+    hlo_path = f"/tmp/perf_{args.arch}_{args.shape}.hlo"
+    t0 = time.time()
+    r = run_cell(args.arch, args.shape, args.multi_pod, knobs, verbose=False,
+                 save_hlo=hlo_path)
+    rec = {"tag": args.tag, "arch": args.arch, "shape": args.shape,
+           "mesh": r.get("mesh"), "knobs": knobs,
+           "roofline": r.get("roofline"), "memory": r.get("memory"),
+           "bytes_by_kind": {k: v for k, v in
+                             list(r["cost"]["bytes_by_kind"].items())[:8]}
+           if r.get("ok") else None,
+           "wall_s": round(time.time() - t0, 1)}
+
+    if args.flash_estimate and r.get("ok"):
+        n_chips = 512 if args.multi_pod else 256
+        text = open(hlo_path).read()
+        pred = flash_pred(args.q_chunk, SHAPES[args.shape].seq_len)
+        est = hlo_cost.analyze(text, exclude_pred=pred)
+        roof = roofline_report(est, est["collectives"], n_chips,
+                               r["roofline"].get("model_flops"))
+        rec["flash_estimate"] = roof
+        # full TPU-native estimate: flash + bf16-width wide tensors
+        estn = hlo_cost.analyze(text, exclude_pred=pred, tpu_native=True)
+        roofn = roofline_report(estn, estn["collectives"], n_chips,
+                                r["roofline"].get("model_flops"))
+        rec["tpu_native_estimate"] = roofn
+
+    print(json.dumps(rec, indent=1, default=float))
+    log = os.path.join(os.path.dirname(__file__), "perf_log.jsonl")
+    with open(log, "a") as f:
+        f.write(json.dumps(rec, default=float) + "\n")
+    print(f"appended to {log}; HLO at {hlo_path}")
+
+
+if __name__ == "__main__":
+    main()

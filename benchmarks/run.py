@@ -1,0 +1,47 @@
+"""Benchmark harness: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``
+
+Prints a ``name,seconds,derived`` CSV row per artifact and dumps the full
+JSON to benchmarks/results.json. Roofline numbers live in the dry-run
+(launch.dryrun) because they need the 512-device lowering.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import paper_artifacts, kernel_bench
+
+    results = []
+    print("name,seconds,derived")
+    for fn in list(paper_artifacts.ALL) + list(kernel_bench.ALL):
+        t0 = time.time()
+        res = fn()
+        dt = time.time() - t0
+        results.append(res)
+        print(f"{res['artifact']},{dt:.1f},{res.get('derived', '')}")
+
+    # headline: the paper's >20% claim must reproduce
+    fig8 = next(r for r in results if r["artifact"] == "fig8")
+    fig10 = next(r for r in results if r["artifact"] == "fig10")
+    ok = (fig8["improvement_vs_best_baseline"] > 0.20
+          and fig10["improvement_vs_best_baseline"] > 0.20)
+    print(f"\npaper_claim_>20%_improvement:"
+          f" fig8={fig8['improvement_vs_best_baseline']:.1%}"
+          f" fig10={fig10['improvement_vs_best_baseline']:.1%}"
+          f" -> {'PASS' if ok else 'FAIL'}")
+
+    out = os.path.join(os.path.dirname(__file__), "results.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,204 @@
+"""Algorithm 1 — Task Assignments (paper §5.1) + disaster recovery (§1.1/§5.2).
+
+Given graph data G, the trained GNN F, N tasks with minimum memory thresholds
+M_n, split the graph into per-task machine groups. Faithful to the paper's
+control flow:
+
+  C <- 0
+  if G does not meet the requirements of all tasks: error
+  for i in 1..N:
+      G_i, G_{i+1} <- F(G_i)            # GNN splits off the group for task i
+      assign G_i to the task with the appropriate threshold M_n
+      if G_i fails the requirements: C <- i and continue
+          (when C >= 1: G_i <- G_i + G_C, assign, C <- 0)
+      if G_{i+1} fails the remaining requirements: break and wait
+
+F's bipartition is realized with the multi-class GNN: the nodes whose argmax
+class is task i form G_i, the rest form G_{i+1}. A repair pass (beyond-paper,
+documented in DESIGN.md) steals the cheapest-linked nodes from over-provisioned
+groups when a task is left short — this makes the scheduler total instead of
+"wait for other tasks" when capacity actually exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core import gnn
+from repro.core import train as gnn_train
+from repro.core.graph import ClusterGraph
+
+
+class PlacementError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class Assignment:
+    groups: dict[str, list[int]]     # task name -> machine ids
+    deferred: list[str]              # tasks waiting for capacity
+    stage_order: dict[str, list[int]]  # GPipe chain order per task
+
+
+def _mem(graph: ClusterGraph, ids) -> float:
+    m = graph.memory_gb()
+    return float(sum(m[i] for i in ids))
+
+
+def check_capacity(graph: ClusterGraph, tasks: Sequence[cm.ModelTask]) -> bool:
+    total = float(graph.memory_gb().sum())
+    return total >= sum(t.min_memory_gb for t in tasks)
+
+
+def task_assignments(graph: ClusterGraph, tasks: Sequence[cm.ModelTask],
+                     params, cfg: gnn.GNNConfig, repair: bool = True) -> Assignment:
+    """Algorithm 1. Tasks are processed largest-first (paper: classify classes
+    'according to this scale')."""
+    if not check_capacity(graph, tasks):
+        raise PlacementError("G does not meet the requirements of all tasks")
+
+    order = sorted(range(len(tasks)), key=lambda i: -tasks[i].params)
+    remaining = list(range(graph.n))
+    groups: dict[str, list[int]] = {}
+    deferred: list[str] = []
+    carry: list[int] = []  # the paper's G_C
+
+    for idx, ti in enumerate(order):
+        task = tasks[ti]
+        if not remaining:
+            deferred.append(task.name)
+            continue
+        sub = graph.subgraph(remaining)
+        pred = gnn_train.predict(params, cfg, sub)  # class per node of subgraph
+        g_i = [remaining[k] for k in range(len(remaining)) if pred[k] == ti]
+        if not g_i:
+            # GNN put nothing in this class: take its highest-logit nodes
+            logits = gnn_train.predict_logits(params, cfg, sub)[:, ti]
+            ranked = np.argsort(-logits)
+            g_i = [remaining[int(ranked[0])]]
+
+        if _mem(graph, g_i) < task.min_memory_gb:
+            if carry:
+                g_i = sorted(set(g_i) | set(carry))  # G_i <- G_i + G_C
+                carry = []
+            if _mem(graph, g_i) < task.min_memory_gb:
+                carry = g_i          # C <- i and continue
+                remaining = [r for r in remaining if r not in set(g_i)]
+                deferred.append(task.name)
+                continue
+
+        groups[task.name] = sorted(g_i)
+        remaining = [r for r in remaining if r not in set(g_i)]
+
+        rest_tasks = [tasks[tj] for tj in order[idx + 1:]]
+        if rest_tasks and _mem(graph, remaining + carry) < sum(
+                t.min_memory_gb for t in rest_tasks):
+            # "Break and provide a prompt and wait for other tasks to complete"
+            deferred.extend(t.name for t in rest_tasks)
+            break
+
+    if carry:
+        remaining = sorted(set(remaining) | set(carry))
+
+    if repair:
+        groups, deferred, remaining = _repair(graph, tasks, groups, deferred,
+                                              remaining)
+    # Nodes predicted idle (or left over) stay unassigned: they are the spare
+    # pool for disaster recovery (paper Table 2 leaves 7 of 46 nodes idle).
+    stage_order = {name: cm.greedy_chain_order(graph, ids)
+                   for name, ids in groups.items()}
+    return Assignment(groups=groups, deferred=deferred, stage_order=stage_order)
+
+
+def _repair(graph, tasks, groups, deferred, remaining):
+    """Give deferred tasks capacity from the free pool first, then steal from
+    over-provisioned groups along the cheapest links."""
+    lat = graph.latency.copy()
+    lat[lat <= 0] = np.inf
+    mem = graph.memory_gb()
+    by_name = {t.name: t for t in tasks}
+    still_deferred = []
+    for name in deferred:
+        task = by_name[name]
+        got = list(groups.get(name, []))
+        need = task.min_memory_gb - _mem(graph, got)
+        # free pool first
+        while need > 0 and remaining:
+            pick = (min(remaining, key=lambda i: min((lat[i, j] for j in got),
+                                                     default=0.0))
+                    if got else remaining[0])
+            got.append(pick)
+            remaining.remove(pick)
+            need -= mem[pick]
+        # steal from surpluses
+        if need > 0:
+            for other, ids in sorted(groups.items(),
+                                     key=lambda kv: -_mem(graph, kv[1])):
+                if other == name:
+                    continue
+                surplus = _mem(graph, ids) - by_name[other].min_memory_gb
+                while need > 0 and surplus > 0 and len(ids) > 1:
+                    pick = min(ids, key=lambda i: min((lat[i, j] for j in got),
+                                                      default=0.0))
+                    if surplus - mem[pick] < 0:
+                        break
+                    ids.remove(pick)
+                    got.append(pick)
+                    surplus -= mem[pick]
+                    need -= mem[pick]
+                if need <= 0:
+                    break
+        if need <= 0 and got:
+            groups[name] = sorted(got)
+        else:
+            remaining.extend(i for i in got if i not in remaining)
+            still_deferred.append(name)
+    return groups, still_deferred, remaining
+
+
+# ---------------------------------------------------------------------------
+# Disaster recovery (paper §1.1): machines fail mid-training; because the
+# GNN assignment records exactly which tasks each machine serves, only the
+# affected groups are re-planned.
+# ---------------------------------------------------------------------------
+def recover(graph: ClusterGraph, assignment: Assignment,
+            failed: Sequence[int], tasks: Sequence[cm.ModelTask],
+            params, cfg: gnn.GNNConfig) -> tuple[ClusterGraph, Assignment]:
+    failed = set(failed)
+    by_name = {t.name: t for t in tasks}
+    survivors = graph.remove_machines(sorted(failed))
+    # old-id -> new-id map
+    keep = [i for i in range(graph.n) if i not in failed]
+    remap = {old: new for new, old in enumerate(keep)}
+
+    affected = [name for name, ids in assignment.groups.items()
+                if any(i in failed for i in ids)]
+    groups = {name: sorted(remap[i] for i in ids if i not in failed)
+              for name, ids in assignment.groups.items()}
+
+    ok = {}
+    redo_tasks = []
+    for name, ids in groups.items():
+        if name in affected and _mem(survivors, ids) < by_name[name].min_memory_gb:
+            redo_tasks.append(by_name[name])
+        else:
+            ok[name] = ids
+    if redo_tasks:
+        used = set(i for ids in ok.values() for i in ids)
+        pool = [i for i in range(survivors.n) if i not in used]
+        sub = survivors.subgraph(pool) if pool else None
+        if sub is None or not check_capacity(sub, redo_tasks):
+            # not enough spare capacity: re-plan everything on the survivors
+            new_assignment = task_assignments(survivors, tasks, params, cfg)
+            return survivors, new_assignment
+        sub_assign = task_assignments(sub, redo_tasks, params, cfg)
+        for name, ids in sub_assign.groups.items():
+            ok[name] = sorted(pool[k] for k in ids)
+    stage_order = {name: cm.greedy_chain_order(survivors, ids)
+                   for name, ids in ok.items()}
+    deferred = [t.name for t in tasks if t.name not in ok]
+    return survivors, Assignment(groups=ok, deferred=deferred,
+                                 stage_order=stage_order)

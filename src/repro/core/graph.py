@@ -1,0 +1,207 @@
+"""Cluster graph representation (paper §3 "Data Representation").
+
+Nodes are machines with features {region, compute capability, total GPU
+memory}; edges carry measured communication latency in **ms per 64-byte
+message** (paper Table 1). The adjacency matrix stores latencies; 0 means
+"cannot communicate" (network-policy blocked) and the diagonal is 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Regions and the paper's measured latency rows (Table 1, ms per 64 bytes).
+# ---------------------------------------------------------------------------
+REGIONS = [
+    "Beijing", "Nanjing", "California", "Tokyo", "Berlin",
+    "London", "NewDelhi", "Paris", "Rome", "Brasilia",
+]
+_R = {r: i for i, r in enumerate(REGIONS)}
+
+# np.nan marks "unreachable" (Beijing<->Paris in the paper).
+_T1_COLS = ["California", "Tokyo", "Berlin", "London", "NewDelhi", "Paris", "Rome", "Brasilia"]
+PAPER_LATENCY_TABLE = {
+    "Beijing":    [89.1, 74.3, 250.5, 229.8, 341.9, np.nan, 296.0, 341.8],
+    "Nanjing":    [97.9, 173.8, 213.7, 176.7, 236.3, 265.1, 741.3, 351.3],
+    "California": [1.0, 118.8, 144.8, 132.3, 197.0, 133.9, 158.6, 158.6],
+}
+
+# Rough great-circle distances (1000 km) used ONLY to complete pairs the paper
+# does not report; latency estimate = 0.7 ms per 100 km (fiber RTT-ish) + 20ms.
+_COORDS = {  # lat, lon
+    "Beijing": (39.9, 116.4), "Nanjing": (32.1, 118.8), "California": (37.4, -122.1),
+    "Tokyo": (35.7, 139.7), "Berlin": (52.5, 13.4), "London": (51.5, -0.1),
+    "NewDelhi": (28.6, 77.2), "Paris": (48.9, 2.4), "Rome": (41.9, 12.5),
+    "Brasilia": (-15.8, -47.9),
+}
+
+
+def _haversine_km(a: str, b: str) -> float:
+    lat1, lon1 = np.radians(_COORDS[a])
+    lat2, lon2 = np.radians(_COORDS[b])
+    dlat, dlon = lat2 - lat1, lon2 - lon1
+    h = np.sin(dlat / 2) ** 2 + np.cos(lat1) * np.cos(lat2) * np.sin(dlon / 2) ** 2
+    return 2 * 6371.0 * np.arcsin(np.sqrt(h))
+
+
+def region_latency_ms(a: str, b: str) -> float:
+    """Latency (ms / 64B msg) between regions: paper value if measured, else
+    a distance-derived estimate. Returns np.nan for blocked pairs."""
+    if a == b:
+        return 1.0
+    for src, dst in ((a, b), (b, a)):
+        if src in PAPER_LATENCY_TABLE and dst in _T1_COLS:
+            return PAPER_LATENCY_TABLE[src][_T1_COLS.index(dst)]
+    return 20.0 + 0.7 * _haversine_km(a, b) / 100.0 * 10.0
+
+
+# ---------------------------------------------------------------------------
+# GPU catalog: name -> (compute capability, mem GB/GPU, bf16-ish TFLOP/s/GPU)
+# (capability is the paper's "computing power" feature; TFLOP/s feeds the
+#  cost model).
+# ---------------------------------------------------------------------------
+GPU_CATALOG = {
+    "A100":     (8.0, 80, 312.0),
+    "A40":      (8.6, 48, 149.7),
+    "V100":     (7.0, 32, 125.0),
+    "A5000":    (8.6, 24, 111.1),
+    "GTX1080Ti": (6.1, 11, 11.3),
+    "RTX3090":  (8.6, 24, 71.0),
+    "TITANXp":  (6.1, 12, 12.1),
+}
+
+
+@dataclasses.dataclass
+class Machine:
+    region: str
+    gpu: str
+    n_gpus: int = 8
+
+    @property
+    def capability(self) -> float:
+        return GPU_CATALOG[self.gpu][0]
+
+    @property
+    def memory_gb(self) -> float:
+        return GPU_CATALOG[self.gpu][1] * self.n_gpus
+
+    @property
+    def tflops(self) -> float:
+        return GPU_CATALOG[self.gpu][2] * self.n_gpus
+
+
+@dataclasses.dataclass
+class ClusterGraph:
+    """Dense graph of machines. latency[i, j] in ms/64B; 0 = no edge."""
+    machines: list[Machine]
+    latency: np.ndarray  # (n, n) float, 0 on diagonal and blocked pairs
+
+    @property
+    def n(self) -> int:
+        return len(self.machines)
+
+    def node_features(self) -> np.ndarray:
+        """[one-hot region | capability/10 | memory/512] per node (paper §3:
+        v_0 = {'Beijing', 8.6, 152} embedded into vector space)."""
+        n_r = len(REGIONS)
+        feats = np.zeros((self.n, n_r + 2), np.float32)
+        for i, m in enumerate(self.machines):
+            feats[i, _R[m.region]] = 1.0
+            feats[i, n_r] = m.capability / 10.0
+            feats[i, n_r + 1] = m.memory_gb / 512.0
+        return feats
+
+    def adjacency_mask(self) -> np.ndarray:
+        a = (self.latency > 0).astype(np.float32)
+        np.fill_diagonal(a, 0.0)
+        return a
+
+    def memory_gb(self) -> np.ndarray:
+        return np.array([m.memory_gb for m in self.machines], np.float32)
+
+    def tflops(self) -> np.ndarray:
+        return np.array([m.tflops for m in self.machines], np.float32)
+
+    # -- scalability (paper §5.2) ------------------------------------------
+    def add_machine(self, machine: Machine,
+                    latencies: dict[int, float] | None = None) -> "ClusterGraph":
+        """Join a machine: define {City, Capability, Memory} and connect it with
+        latency-weighted edges (region-derived if not given)."""
+        n = self.n
+        lat = np.zeros((n + 1, n + 1), self.latency.dtype)
+        lat[:n, :n] = self.latency
+        for j, other in enumerate(self.machines):
+            if latencies is not None and j in latencies:
+                w = latencies[j]
+            else:
+                w = region_latency_ms(machine.region, other.region)
+            if np.isnan(w):
+                w = 0.0
+            lat[n, j] = lat[j, n] = w
+        return ClusterGraph(self.machines + [machine], lat)
+
+    def remove_machines(self, ids: Sequence[int]) -> "ClusterGraph":
+        """Scalability/disaster recovery: drop nodes (remove edge info)."""
+        keep = [i for i in range(self.n) if i not in set(ids)]
+        return self.subgraph(keep)
+
+    def subgraph(self, ids: Sequence[int]) -> "ClusterGraph":
+        ids = list(ids)
+        return ClusterGraph([self.machines[i] for i in ids],
+                            self.latency[np.ix_(ids, ids)].copy())
+
+
+def _latency_matrix(machines: list[Machine], rng: np.random.Generator) -> np.ndarray:
+    n = len(machines)
+    lat = np.zeros((n, n), np.float32)
+    for i in range(n):
+        for j in range(i + 1, n):
+            base = region_latency_ms(machines[i].region, machines[j].region)
+            if np.isnan(base):
+                continue  # blocked pair -> no edge
+            jitter = float(rng.uniform(0.9, 1.1))
+            lat[i, j] = lat[j, i] = base * jitter
+    return lat
+
+
+def paper_fig1_graph(seed: int = 0) -> ClusterGraph:
+    """The 8-machine example of Fig. 1 (node 0 = {Beijing, 8.6, 152})."""
+    rng = np.random.default_rng(seed)
+    machines = [
+        Machine("Beijing", "RTX3090", 6),     # cap 8.6, ~152GB total w/ mixed
+        Machine("California", "A100", 8),
+        Machine("Tokyo", "V100", 8),
+        Machine("London", "A40", 8),
+        Machine("Nanjing", "A5000", 8),
+        Machine("Berlin", "RTX3090", 8),
+        Machine("NewDelhi", "GTX1080Ti", 8),
+        Machine("Rome", "TITANXp", 8),
+    ]
+    return ClusterGraph(machines, _latency_matrix(machines, rng))
+
+
+def paper_fleet46(seed: int = 0) -> ClusterGraph:
+    """The 46-server / 368-GPU fleet of §6.1 (8 GPUs per server, mixed models
+    across the paper's regions). The exact fleet is private; this is a seeded
+    reconstruction with the published latency rows."""
+    rng = np.random.default_rng(seed)
+    gpus = list(GPU_CATALOG)
+    machines = []
+    for i in range(46):
+        region = REGIONS[int(rng.integers(0, len(REGIONS)))]
+        gpu = gpus[int(rng.integers(0, len(gpus)))]
+        machines.append(Machine(region, gpu, 8))
+    return ClusterGraph(machines, _latency_matrix(machines, rng))
+
+
+def random_fleet(n: int, seed: int = 0) -> ClusterGraph:
+    rng = np.random.default_rng(seed)
+    gpus = list(GPU_CATALOG)
+    machines = [Machine(REGIONS[int(rng.integers(0, len(REGIONS)))],
+                        gpus[int(rng.integers(0, len(gpus)))],
+                        int(rng.integers(4, 9)))
+                for _ in range(n)]
+    return ClusterGraph(machines, _latency_matrix(machines, rng))

@@ -1,0 +1,134 @@
+"""Oracle labeler: cost-model-guided partition used as sparse supervision.
+
+The paper trains its GCN on sparsely labeled subgraphs (§3: "we then sparsely
+label this subgraph to enable the neural network to learn the contents of the
+graph in a supervised manner"). The labels come from the operators' own
+placements; we regenerate them with a greedy + local-search partitioner that
+minimizes the cost-model makespan under Algorithm 1's memory thresholds.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.graph import ClusterGraph
+
+
+def _group_cost(graph: ClusterGraph, ids: list[int], task: cm.ModelTask,
+                comm) -> float:
+    if not ids:
+        return np.inf
+    c, p = cm.group_step_time(graph, ids, task, comm, "gpipe")
+    return c + p
+
+
+def idle_class(tasks: Sequence[cm.ModelTask]) -> int:
+    """Nodes the placement leaves unused (paper Table 2 assigns 39 of 46
+    machines; the rest idle / serve as the disaster-recovery spare pool)."""
+    return len(tasks)
+
+
+def greedy_partition(graph: ClusterGraph, tasks: Sequence[cm.ModelTask],
+                     comm=None, seed: int = 0) -> np.ndarray:
+    """Label every node with a task id or the idle class. Big tasks claim
+    first; a group grows from a well-connected seed along the cheapest links
+    until the memory threshold is met, then keeps absorbing nodes only while
+    that lowers the group's estimated step time (comm + compute)."""
+    comm = comm or cm.make_comm(graph)
+    n = graph.n
+    mem = graph.memory_gb()
+    lat = graph.latency.copy()
+    lat[lat <= 0] = np.inf
+    np.fill_diagonal(lat, np.inf)
+
+    order = sorted(range(len(tasks)), key=lambda i: -tasks[i].params)
+    labels = np.full(n, idle_class(tasks), np.int64)
+    unassigned = set(range(n))
+
+    for ti in order:
+        task = tasks[ti]
+        if not unassigned:
+            break
+        pool = sorted(unassigned)
+        seed_node = min(pool, key=lambda i: np.min(lat[i, pool]) if len(pool) > 1 else 0.0)
+        group = [seed_node]
+        unassigned.remove(seed_node)
+        got_mem = mem[seed_node]
+        # phase 1: reach the memory threshold M_n
+        while unassigned and got_mem < task.min_memory_gb:
+            pool = sorted(unassigned)
+            nxt = min(pool, key=lambda j: min(lat[i, j] for i in group))
+            group.append(nxt)
+            unassigned.remove(nxt)
+            got_mem += mem[nxt]
+        # phase 2: absorb more nodes only while step time improves
+        cur = _group_cost(graph, group, task, comm)
+        while unassigned:
+            pool = sorted(unassigned)
+            nxt = min(pool, key=lambda j: min(lat[i, j] for i in group))
+            cand = _group_cost(graph, group + [nxt], task, comm)
+            if cand >= cur:
+                break
+            group.append(nxt)
+            unassigned.remove(nxt)
+            cur = cand
+        labels[group] = ti
+    return labels
+
+
+def local_search(graph: ClusterGraph, labels: np.ndarray,
+                 tasks: Sequence[cm.ModelTask], comm=None, iters: int = 200,
+                 seed: int = 0) -> np.ndarray:
+    """Single-node moves (including to/from idle) that reduce makespan while
+    keeping every task group memory-feasible."""
+    comm = comm or cm.make_comm(graph)
+    rng = np.random.default_rng(seed)
+    labels = labels.copy()
+    mem = graph.memory_gb()
+    idle = idle_class(tasks)
+
+    def makespan(lab):
+        worst = 0.0
+        for ti, task in enumerate(tasks):
+            ids = [i for i in range(graph.n) if lab[i] == ti]
+            worst = max(worst, _group_cost(graph, ids, task, comm))
+        return worst
+
+    cur = makespan(labels)
+    for _ in range(iters):
+        i = int(rng.integers(0, graph.n))
+        old = int(labels[i])
+        new = int(rng.integers(0, len(tasks) + 1))  # idle allowed
+        if new == old:
+            continue
+        if old != idle:
+            donor_ids = [j for j in range(graph.n) if labels[j] == old and j != i]
+            if sum(mem[j] for j in donor_ids) < tasks[old].min_memory_gb:
+                continue
+        labels[i] = new
+        nxt = makespan(labels)
+        if nxt < cur:
+            cur = nxt
+        else:
+            labels[i] = old
+    return labels
+
+
+def oracle_labels(graph: ClusterGraph, tasks: Sequence[cm.ModelTask],
+                  comm=None, seed: int = 0, refine_iters: int = 150) -> np.ndarray:
+    comm = comm or cm.make_comm(graph)
+    lab = greedy_partition(graph, tasks, comm, seed)
+    if refine_iters:
+        lab = local_search(graph, lab, tasks, comm, refine_iters, seed)
+    return lab
+
+
+def sparse_mask(n: int, frac: float = 0.6, seed: int = 0) -> np.ndarray:
+    """Sparse supervision mask (paper §3)."""
+    rng = np.random.default_rng(seed)
+    mask = (rng.uniform(size=n) < frac).astype(np.float32)
+    if mask.sum() == 0:
+        mask[0] = 1.0
+    return mask

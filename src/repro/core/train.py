@@ -1,0 +1,102 @@
+"""Supervised training of the Hulk GNN (paper §4, Fig. 4).
+
+Full-batch node classification per graph with masked cross-entropy; Adam with
+the paper's hyperparameters (lr 0.01, ~188k params, 10 steps to ~99% node
+accuracy on the running example).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gnn
+from repro.core import cost_model as cm
+from repro.core import labels as labels_mod
+from repro.core.graph import ClusterGraph, random_fleet
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def gnn_config_for(tasks: Sequence[cm.ModelTask], **kw) -> gnn.GNNConfig:
+    """n_tasks classes + 1 idle class (paper Table 2 leaves nodes unassigned)."""
+    return gnn.GNNConfig(n_classes=len(tasks) + 1, **kw)
+
+
+@dataclasses.dataclass
+class GraphExample:
+    feats: np.ndarray
+    lat: np.ndarray
+    labels: np.ndarray
+    mask: np.ndarray
+
+
+def make_example(graph: ClusterGraph, tasks: Sequence[cm.ModelTask],
+                 seed: int = 0, label_frac: float = 1.0) -> GraphExample:
+    lab = labels_mod.oracle_labels(graph, tasks, seed=seed)
+    mask = labels_mod.sparse_mask(graph.n, label_frac, seed)
+    return GraphExample(graph.node_features(), graph.latency.astype(np.float32),
+                        lab, mask)
+
+
+def make_dataset(n_graphs: int, tasks: Sequence[cm.ModelTask], n_nodes: int = 24,
+                 seed: int = 0, label_frac: float = 0.7) -> list[GraphExample]:
+    out = []
+    for g in range(n_graphs):
+        fleet = random_fleet(n_nodes, seed=seed + g)
+        out.append(make_example(fleet, tasks, seed=seed + g, label_frac=label_frac))
+    return out
+
+
+@partial(jax.jit, static_argnames=("cfg", "opt_cfg"))
+def _train_step(params, opt_state, cfg: gnn.GNNConfig, opt_cfg: AdamWConfig,
+                feats, lat, labels, mask):
+    (loss, metrics), grads = jax.value_and_grad(gnn.loss_fn, has_aux=True)(
+        params, cfg, feats, lat, labels, mask)
+    params, opt_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+    metrics.update(om)
+    return params, opt_state, metrics
+
+
+def train_gnn(cfg: gnn.GNNConfig, dataset: Sequence[GraphExample],
+              steps: int = 10, lr: float = 0.01, seed: int = 0,
+              params=None):
+    """Train for `steps` epochs over the dataset; returns (params, history).
+
+    With a single graph in the dataset this reproduces the paper's Fig. 4
+    setting (10 steps, lr 0.01)."""
+    d_in = dataset[0].feats.shape[1]
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = gnn.init(key, cfg, d_in)
+    opt_cfg = AdamWConfig(learning_rate=lr, weight_decay=0.0, b2=0.999,
+                          grad_clip_norm=0.0)
+    opt_state = adamw_init(params)
+    history = []
+    for step in range(steps):
+        losses, accs = [], []
+        for ex in dataset:
+            params, opt_state, m = _train_step(
+                params, opt_state, cfg, opt_cfg,
+                jnp.asarray(ex.feats), jnp.asarray(ex.lat),
+                jnp.asarray(ex.labels), jnp.asarray(ex.mask))
+            losses.append(float(m["loss"]))
+            accs.append(float(m["accuracy"]))
+        history.append({"step": step, "loss": float(np.mean(losses)),
+                        "accuracy": float(np.mean(accs))})
+    return params, history
+
+
+def predict(params, cfg: gnn.GNNConfig, graph: ClusterGraph) -> np.ndarray:
+    logits = gnn.apply(params, cfg, jnp.asarray(graph.node_features()),
+                       jnp.asarray(graph.latency.astype(np.float32)))
+    return np.asarray(jnp.argmax(logits, axis=-1))
+
+
+def predict_logits(params, cfg: gnn.GNNConfig, graph: ClusterGraph) -> np.ndarray:
+    return np.asarray(gnn.apply(params, cfg,
+                                jnp.asarray(graph.node_features()),
+                                jnp.asarray(graph.latency.astype(np.float32))))

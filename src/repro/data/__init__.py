@@ -1,0 +1,4 @@
+from repro.data.synthetic import (SyntheticConfig, SyntheticLM, batch_struct,
+                                  make_batch)
+
+__all__ = ["SyntheticConfig", "SyntheticLM", "batch_struct", "make_batch"]

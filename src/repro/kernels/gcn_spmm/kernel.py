@@ -1,0 +1,60 @@
+"""Pallas TPU blocked SpMM for the GCN aggregation A_hat @ H.
+
+The paper's own compute hot spot (gnn.py `_aggregate`): the (n x n)
+adjacency-by-features product inside every edge-pool / GCN layer. Fleet
+graphs are dense-small (n <= a few thousand machines), so the TPU-native
+form is a *masked dense* blocked matmul: (BI x BK) adjacency tiles stream
+against (BK x D) feature tiles with an fp32 VMEM accumulator over the K grid
+dim — MXU-shaped (128-multiple) tiles rather than a GPU-style
+gather/scatter SpMM, which does not map to the systolic array (DESIGN.md
+SS3 hardware adaptation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_I = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _spmm_kernel(a_ref, h_ref, o_ref, acc_scr):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    a = a_ref[...].astype(jnp.float32)              # (BI, BK)
+    h = h_ref[...].astype(jnp.float32)              # (BK, D)
+    acc_scr[...] += jax.lax.dot_general(
+        a, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def spmm_blocked(adj, feats, *, block_i: int = DEFAULT_BLOCK_I,
+                 block_k: int = DEFAULT_BLOCK_K, interpret: bool = True):
+    """adj (N, N), feats (N, D) -> (N, D); N multiple of blocks, D
+    lane-aligned (ops.py pads)."""
+    n, d = feats.shape
+    ni, nk = adj.shape[0] // block_i, n // block_k
+    return pl.pallas_call(
+        functools.partial(_spmm_kernel),
+        grid=(ni, nk),
+        in_specs=[
+            pl.BlockSpec((block_i, block_k), lambda i, k: (i, k)),
+            pl.BlockSpec((block_k, d), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_i, d), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((adj.shape[0], d), feats.dtype),
+        scratch_shapes=[pltpu.VMEM((block_i, d), jnp.float32)],
+        interpret=interpret,
+    )(adj, feats)

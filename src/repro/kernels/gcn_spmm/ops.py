@@ -1,0 +1,28 @@
+"""jit wrapper: pad fleet-sized graphs to MXU tiles, backend selection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gcn_spmm import kernel as _k
+from repro.kernels.gcn_spmm import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("force_ref",))
+def spmm(adj, feats, *, force_ref: bool = False):
+    """adj (N, N) @ feats (N, D) -> (N, D), any N/D (padded internally)."""
+    if force_ref:
+        return _ref.spmm_ref(adj, feats)
+    n, d = feats.shape
+    bi = min(_k.DEFAULT_BLOCK_I, max(8, 1 << (n - 1).bit_length()))
+    bk = min(_k.DEFAULT_BLOCK_K, max(8, 1 << (n - 1).bit_length()))
+    pad_n_i = (-adj.shape[0]) % bi
+    pad_n_k = (-n) % bk
+    pad_d = (-d) % 128
+    a = jnp.pad(adj, ((0, pad_n_i), (0, pad_n_k)))
+    h = jnp.pad(feats, ((0, pad_n_k), (0, pad_d)))
+    interpret = jax.default_backend() != "tpu"
+    o = _k.spmm_blocked(a, h, block_i=bi, block_k=bk, interpret=interpret)
+    return o[:adj.shape[0], :d]

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the GCN aggregation."""
+import jax.numpy as jnp
+
+
+def spmm_ref(adj, feats):
+    return (adj.astype(jnp.float32) @ feats.astype(jnp.float32)).astype(
+        feats.dtype)

@@ -1,0 +1,22 @@
+"""Production meshes. A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis is
+    the slow DCN axis — Hulk's placement puts only DP gradient reduction
+    (or pipeline activations, cost-model-chosen) on it."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(devices_needed: int):
+    """Best-effort mesh from the actually available devices (examples/e2e
+    drivers on CPU): (data=N, model=1)."""
+    n = min(devices_needed, len(jax.devices()))
+    return jax.make_mesh((n, 1), ("data", "model"))

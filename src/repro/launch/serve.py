@@ -1,0 +1,81 @@
+"""Serving launcher — batched prefill + greedy decode over the registry API.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.data.synthetic import SyntheticConfig, make_batch
+from repro.models.registry import get_api
+from repro.training.train_step import make_decode_step, make_prefill
+
+
+def serve_batch(cfg, params, batch: dict, gen_tokens: int, log=print):
+    """Prefill the prompt batch, then greedy-decode gen_tokens. Returns
+    (generated (B, gen), tokens/s)."""
+    if jax.default_backend() == "tpu":
+        from repro.models import common as cc
+        cc.RUNTIME["use_flash"] = True   # Pallas flash/decode kernels
+    api = get_api(cfg)
+    prefill_fn = make_prefill(cfg, api)
+    decode_fn = jax.jit(make_decode_step(cfg, api))
+    b, s = batch["tokens"].shape
+    extra = cfg.n_patches if cfg.family == "vlm" else 0
+    max_len = extra + s + gen_tokens
+
+    t0 = time.time()
+    last_logits, caches = jax.jit(prefill_fn, static_argnums=(2,))(
+        params, batch, max_len)
+    token = jnp.argmax(last_logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    t_prefill = time.time() - t0
+
+    out = [token]
+    t0 = time.time()
+    for i in range(gen_tokens - 1):
+        pos = jnp.int32(extra + s + i)
+        token, caches = decode_fn(params, token, pos, caches)
+        out.append(token)
+    jax.block_until_ready(token)
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    tps = b * (gen_tokens - 1) / max(t_decode, 1e-9)
+    log(f"prefill {s} toks x{b}: {t_prefill:.2f}s; "
+        f"decode {gen_tokens - 1} steps: {t_decode:.2f}s ({tps:.1f} tok/s)")
+    return np.asarray(gen), tps
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+        cfg = dataclasses.replace(cfg, remat=False)
+    api = get_api(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
+    batch = {k: jnp.asarray(v) for k, v in make_batch(
+        cfg, SyntheticConfig(global_batch=args.batch,
+                             seq_len=args.prompt_len,
+                             seed=args.seed), 0).items()}
+    gen, tps = serve_batch(cfg, params, batch, args.gen)
+    print(f"generated shape {gen.shape}; sample row: {gen[0][:8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,384 @@
+"""Attention layers: GQA (with sliding window, qk-norm) and DeepSeek-style MLA.
+
+Two execution paths per layer:
+  * full-sequence (train / prefill) — optionally routed through the Pallas
+    flash-attention kernel (FLAGS["use_flash"], TPU target);
+  * single-token decode against a KV cache — full cache, ring (sliding-window)
+    cache, or MLA compressed cache (plain or absorbed matmul order).
+
+Shapes: x (B, S, d_model); caches live in a dict pytree so they pjit-shard
+with NamedSharding like any other state.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnSpec, MLASpec
+from repro.models import common as cc
+from repro.models.common import (apply_norm, apply_rope, causal_mask,
+                                 dense_init, logical_constraint)
+
+from repro.models.common import RUNTIME as FLAGS  # launcher-set knobs
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def init_attn(key, spec: AttnSpec, d_model: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    h, kv, dh = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    p = {
+        "wq": dense_init(ks[0], d_model, h * dh, dtype),
+        "wk": dense_init(ks[1], d_model, kv * dh, dtype),
+        "wv": dense_init(ks[2], d_model, kv * dh, dtype),
+        "wo": dense_init(ks[3], h * dh, d_model, dtype),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((dh,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.ones((dh,), jnp.float32)}
+    return p
+
+
+def _project_qkv(p, spec: AttnSpec, x, positions):
+    b, s, _ = x.shape
+    h, kv, dh = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, kv, dh)
+    v = (x @ p["wv"]).reshape(b, s, kv, dh)
+    if spec.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    if spec.use_rope:
+        q = apply_rope(q, positions, spec.rope_theta)
+        k = apply_rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
+def _gqa_attend(q, k, v, mask):
+    """q: (B,S,H,D) k/v: (B,T,KV,D); grouped einsum, no KV repetition."""
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bksgt", qg, k).astype(jnp.float32)
+    scores *= dh ** -0.5
+    scores = jnp.where(mask[:, None, :, None, :] if mask.ndim == 3
+                       else mask[None, None, :, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bksgt,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, dh)
+
+
+def _chunked_attend(q, k, v, spec: AttnSpec, q_chunk: int):
+    """Flash-style q-block attention in pure XLA — the shardable form for
+    SPMD lowering: q keeps full heads (shardable on `model` even when
+    n_kv_heads < axis size), kv heads are repeated *after* sharding
+    propagation (a per-shard slice, not a materialized copy), and the
+    (bq, T) score tile is the only quadratic live tensor. The chunk body is
+    rematerialized so backward residuals stay one tile big.
+
+    q: (B, S, H, D); k/v: (B, T, KV, D). S % q_chunk == 0 (callers pad)."""
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    kr = jnp.repeat(k, g, axis=2)                   # (B, T, H, D)
+    vr = jnp.repeat(v, g, axis=2)
+    nq = s // q_chunk
+    qb = q.reshape(b, nq, q_chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(t, dtype=jnp.int32)
+
+    def body(idx_qblk):
+        idx, q_blk = idx_qblk                       # q_blk (B, bq, H, D)
+        qpos = idx * q_chunk + jnp.arange(q_chunk, dtype=jnp.int32)
+        scores = jnp.einsum("bqhd,bthd->bhqt", q_blk, kr,
+                            preferred_element_type=jnp.float32)
+        scores = scores * dh ** -0.5
+        if spec.causal:
+            m = kpos[None, :] <= qpos[:, None]
+            if spec.window is not None:
+                m &= kpos[None, :] > (qpos[:, None] - spec.window)
+            scores = jnp.where(m[None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqt,bthd->bqhd", w, vr)
+
+    out = jax.lax.map(jax.checkpoint(body),
+                      (jnp.arange(nq, dtype=jnp.int32), qb))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+
+
+def attn_full(p, spec: AttnSpec, x, positions, return_kv: bool = False):
+    """Training / prefill self-attention (causal unless spec.causal=False)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, spec, x, positions)
+    q = logical_constraint(q, cc.BATCH, None, cc.HEADS, None)
+    k = logical_constraint(k, cc.BATCH, None, cc.HEADS, None)
+    v = logical_constraint(v, cc.BATCH, None, cc.HEADS, None)
+    q_chunk = FLAGS["q_chunk"]
+    if FLAGS["use_flash"] and spec.causal:
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(q, k, v, window=spec.window)
+    elif q_chunk and s % q_chunk == 0 and s > q_chunk:
+        out = _chunked_attend(q, k, v, spec, q_chunk)
+    else:
+        if spec.causal:
+            mask = causal_mask(positions, positions, spec.window)
+        else:
+            mask = jnp.ones((s, s), bool) if positions.ndim == 1 else \
+                jnp.ones((b, s, s), bool)
+        out = _gqa_attend(q, k, v, mask)
+    y = out.reshape(b, s, -1) @ p["wo"]
+    y = logical_constraint(y, cc.BATCH, cc.SEQ, cc.EMBED)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attn_cross(p, spec: AttnSpec, x, kv_cache: tuple):
+    """Cross-attention (whisper decoder): K,V precomputed from the encoder."""
+    b, s, _ = x.shape
+    h, dh = spec.n_heads, spec.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k, v = kv_cache
+    mask = jnp.ones((b, s, k.shape[1]), bool)
+    out = _gqa_attend(q, k, v, mask)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+# -- KV caches ---------------------------------------------------------------
+def cache_len(spec: AttnSpec, max_len: int) -> int:
+    return max_len if spec.window is None else min(spec.window, max_len)
+
+
+def init_cache(spec: AttnSpec, batch: int, max_len: int, dtype) -> dict:
+    """Full cache, or ring cache bounded at the sliding window."""
+    t = max_len if spec.window is None else min(spec.window, max_len)
+    kv, dh = spec.n_kv_heads, spec.head_dim
+    cache = {
+        "k": jnp.zeros((batch, t, kv, dh), dtype),
+        "v": jnp.zeros((batch, t, kv, dh), dtype),
+    }
+    if spec.window is not None:
+        # per-slot absolute positions (-1 = empty)
+        cache["slot_pos"] = jnp.full((t,), -1, jnp.int32)
+    return cache
+
+
+def attn_prefill(p, spec: AttnSpec, x, positions, max_len: int):
+    """Full forward that also fills the decode cache. Assumes positions are
+    0..S-1 (no padding). Returns (y, cache)."""
+    b, s, _ = x.shape
+    y, (k, v) = attn_full(p, spec, x, positions, return_kv=True)
+    t = cache_len(spec, max_len)
+    if spec.window is None:
+        cache = init_cache(spec, b, max_len, x.dtype)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+    else:
+        # last min(S, W) tokens land in their ring slots
+        w = t
+        take = min(s, w)
+        idx = jnp.arange(s - take, s, dtype=jnp.int32)       # absolute positions
+        slots = jnp.mod(idx, w)
+        kk = jnp.zeros((b, w) + k.shape[2:], x.dtype).at[:, slots].set(
+            k[:, s - take:])
+        vv = jnp.zeros((b, w) + v.shape[2:], x.dtype).at[:, slots].set(
+            v[:, s - take:])
+        slot_pos = jnp.full((w,), -1, jnp.int32).at[slots].set(idx)
+        cache = {"k": kk, "v": vv, "slot_pos": slot_pos}
+    return y, cache
+
+
+def attn_decode(p, spec: AttnSpec, x, pos, cache: dict):
+    """One-token decode. x: (B,1,d); pos: scalar int32 (current position).
+    Returns (y, new_cache)."""
+    b = x.shape[0]
+    h, kvh, dh = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, spec, x, positions)
+
+    t = cache["k"].shape[1]
+    if spec.window is None:
+        slot = pos
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+        k_pos = jnp.arange(t, dtype=jnp.int32)
+        valid = k_pos <= pos
+        new_cache = {"k": k, "v": v}
+    else:
+        slot = jnp.mod(pos, t)
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+        slot_pos = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], jnp.full((1,), pos, jnp.int32), (slot,))
+        valid = (slot_pos >= 0) & (slot_pos <= pos) & (slot_pos > pos - spec.window)
+        k_pos = slot_pos
+        new_cache = {"k": k, "v": v, "slot_pos": slot_pos}
+
+    if FLAGS["use_flash"]:
+        from repro.kernels.decode_attention import ops as dec_ops
+        out = dec_ops.decode_attention(q, k, v, valid)
+    else:
+        mask = valid[None, None, :]  # (1,1,T) broadcast over batch, q=1
+        out = _gqa_attend(q, k, v, mask)
+    y = out.reshape(b, 1, -1) @ p["wo"]
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank Q and compressed KV with decoupled RoPE.
+# ---------------------------------------------------------------------------
+def init_mla(key, spec: MLASpec, d_model: int, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    h = spec.n_heads
+    qd = spec.qk_nope_dim + spec.qk_rope_dim
+    return {
+        "wq_a": dense_init(ks[0], d_model, spec.q_lora_rank, dtype),
+        "q_norm": {"scale": jnp.ones((spec.q_lora_rank,), jnp.float32)},
+        "wq_b": dense_init(ks[1], spec.q_lora_rank, h * qd, dtype),
+        "wkv_a": dense_init(ks[2], d_model,
+                            spec.kv_lora_rank + spec.qk_rope_dim, dtype),
+        "kv_norm": {"scale": jnp.ones((spec.kv_lora_rank,), jnp.float32)},
+        "wkv_b": dense_init(ks[3], spec.kv_lora_rank,
+                            h * (spec.qk_nope_dim + spec.v_head_dim), dtype),
+        "wo": dense_init(ks[4], h * spec.v_head_dim, d_model, dtype),
+    }
+
+
+def _mla_q(p, spec: MLASpec, x, positions):
+    b, s, _ = x.shape
+    h = spec.n_heads
+    q = apply_norm(p["q_norm"], x @ p["wq_a"], "rmsnorm") @ p["wq_b"]
+    q = q.reshape(b, s, h, spec.qk_nope_dim + spec.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [spec.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, spec.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, spec: MLASpec, x, positions):
+    """Returns (normalized compressed kv, rotated shared k_rope)."""
+    kv_a = x @ p["wkv_a"]
+    c_kv, k_rope = jnp.split(kv_a, [spec.kv_lora_rank], axis=-1)
+    c_kv = apply_norm(p["kv_norm"], c_kv, "rmsnorm")          # (B,S,L)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        spec.rope_theta)[:, :, 0, :]          # (B,S,R)
+    return c_kv, k_rope
+
+
+def _mla_chunked(q_nope, q_rope, k_nope, k_rope, v, scale, q_chunk: int,
+                 dtype):
+    """q-block chunked MLA attention (same memory argument as
+    _chunked_attend; k_rope is shared across heads so it never repeats)."""
+    b, s, h, dn = q_nope.shape
+    t = k_nope.shape[1]
+    nq = s // q_chunk
+    qn = q_nope.reshape(b, nq, q_chunk, h, dn).transpose(1, 0, 2, 3, 4)
+    qr = q_rope.reshape(b, nq, q_chunk, h, -1).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(t, dtype=jnp.int32)
+
+    def body(args):
+        idx, qn_blk, qr_blk = args
+        qpos = idx * q_chunk + jnp.arange(q_chunk, dtype=jnp.int32)
+        scores = (jnp.einsum("bqhn,bthn->bhqt", qn_blk, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bqhr,btr->bhqt", qr_blk, k_rope,
+                               preferred_element_type=jnp.float32)) * scale
+        m = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(m[None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(dtype)
+        return jnp.einsum("bhqt,bthd->bqhd", w, v)
+
+    out = jax.lax.map(jax.checkpoint(body),
+                      (jnp.arange(nq, dtype=jnp.int32), qn, qr))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, -1)
+
+
+def mla_full(p, spec: MLASpec, x, positions):
+    b, s, _ = x.shape
+    h = spec.n_heads
+    q_nope, q_rope = _mla_q(p, spec, x, positions)
+    c_kv, k_rope = _mla_ckv(p, spec, x, positions)
+    kv = (c_kv @ p["wkv_b"]).reshape(b, s, h, spec.qk_nope_dim + spec.v_head_dim)
+    k_nope, v = jnp.split(kv, [spec.qk_nope_dim], axis=-1)
+    k_nope = logical_constraint(k_nope, cc.BATCH, None, cc.HEADS, None)
+    v = logical_constraint(v, cc.BATCH, None, cc.HEADS, None)
+    scale = (spec.qk_nope_dim + spec.qk_rope_dim) ** -0.5
+    q_chunk = FLAGS["q_chunk"]
+    if q_chunk and s % q_chunk == 0 and s > q_chunk:
+        out = _mla_chunked(q_nope, q_rope, k_nope, k_rope, v, scale, q_chunk,
+                           x.dtype)
+        return out @ p["wo"]
+    scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+              + jnp.einsum("bshr,btr->bhst", q_rope, k_rope)).astype(jnp.float32)
+    scores *= scale
+    mask = causal_mask(positions, positions)
+    scores = jnp.where(mask[:, None] if mask.ndim == 3 else mask[None, None],
+                       scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", w, v).reshape(b, s, -1)
+    return out @ p["wo"]
+
+
+def init_mla_cache(spec: MLASpec, batch: int, max_len: int, dtype) -> dict:
+    """The MLA win: cache only (kv_lora_rank + rope_dim) per token."""
+    return {
+        "ckv": jnp.zeros((batch, max_len, spec.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, spec.qk_rope_dim), dtype),
+    }
+
+
+def mla_prefill(p, spec: MLASpec, x, positions, max_len: int):
+    b, s, _ = x.shape
+    y = mla_full(p, spec, x, positions)
+    c_kv, k_rope = _mla_ckv(p, spec, x, positions)
+    cache = init_mla_cache(spec, b, max_len, x.dtype)
+    cache["ckv"] = jax.lax.dynamic_update_slice(
+        cache["ckv"], c_kv.astype(x.dtype), (0, 0, 0))
+    cache["k_rope"] = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope.astype(x.dtype), (0, 0, 0))
+    return y, cache
+
+
+def mla_decode(p, spec: MLASpec, x, pos, cache: dict, absorb: bool = False):
+    """One-token MLA decode. absorb=True uses the matmul-absorbed order
+    (never re-expands K/V for the whole cache — the §Perf variant)."""
+    b = x.shape[0]
+    h = spec.n_heads
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, spec, x, positions)            # (B,1,H,*)
+    c_new, r_new = _mla_ckv(p, spec, x, positions)            # (B,1,L),(B,1,R)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_new, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], r_new, (0, pos, 0))
+    new_cache = {"ckv": ckv, "k_rope": k_rope}
+
+    t = ckv.shape[1]
+    valid = jnp.arange(t, dtype=jnp.int32) <= pos
+    scale = (spec.qk_nope_dim + spec.qk_rope_dim) ** -0.5
+    wkv_b = p["wkv_b"].reshape(spec.kv_lora_rank, h,
+                               spec.qk_nope_dim + spec.v_head_dim)
+    w_k = wkv_b[..., :spec.qk_nope_dim]    # (L,H,N)
+    w_v = wkv_b[..., spec.qk_nope_dim:]    # (L,H,V)
+
+    if absorb:
+        q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_k)     # (B,1,H,L)
+        scores = (jnp.einsum("bqhl,btl->bhqt", q_eff, ckv)
+                  + jnp.einsum("bqhr,btr->bhqt", q_rope, k_rope))
+    else:
+        kv = (ckv @ p["wkv_b"]).reshape(b, t, h,
+                                        spec.qk_nope_dim + spec.v_head_dim)
+        k_nope, v_full = jnp.split(kv, [spec.qk_nope_dim], axis=-1)
+        scores = (jnp.einsum("bqhn,bthn->bhqt", q_nope, k_nope)
+                  + jnp.einsum("bqhr,btr->bhqt", q_rope, k_rope))
+    scores = scores.astype(jnp.float32) * scale
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+
+    if absorb:
+        ctx = jnp.einsum("bhqt,btl->bqhl", w, ckv)            # (B,1,H,L)
+        out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_v)
+    else:
+        out = jnp.einsum("bhqt,bthv->bqhv", w, v_full)
+    y = out.reshape(b, 1, -1) @ p["wo"]
+    return y, new_cache

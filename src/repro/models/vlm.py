@@ -1,0 +1,54 @@
+"""VLM backbone (InternVL2-style): ViT frontend STUB + MLP projector + LM.
+
+``input_specs`` provides precomputed InternViT patch embeddings
+(B, n_patches, vit_dim); the projector maps them into the LM embedding space
+and they are prepended to the text tokens. Loss is computed on text positions
+only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decoder_lm as dlm
+from repro.models.common import cross_entropy, dense_init
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    k_lm, k1, k2 = jax.random.split(key, 3)
+    params = dlm.init_params(cfg, k_lm)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    params["projector"] = {
+        "w1": dense_init(k1, cfg.vit_dim, cfg.d_model, dt),
+        "w2": dense_init(k2, cfg.d_model, cfg.d_model, dt),
+    }
+    return params
+
+
+def _embed_multimodal(params, cfg: ModelConfig, patches, tokens):
+    proj = jax.nn.gelu(patches @ params["projector"]["w1"]) \
+        @ params["projector"]["w2"]
+    text = params["embed"][tokens]
+    return jnp.concatenate([proj.astype(text.dtype), text], axis=1)
+
+
+def loss_and_metrics(params, cfg: ModelConfig, batch: dict):
+    """batch: patches (B,P,vit_dim), tokens (B,S), labels (B,S)."""
+    embeds = _embed_multimodal(params, cfg, batch["patches"], batch["tokens"])
+    logits, aux, _ = dlm.forward(params, cfg, embeds=embeds)
+    p = batch["patches"].shape[1]
+    text_logits = logits[:, p:]
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = cross_entropy(text_logits, jnp.maximum(labels, 0), mask)
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, patches, tokens, max_len: int = 0):
+    embeds = _embed_multimodal(params, cfg, patches, tokens)
+    return dlm.prefill(params, cfg, embeds=embeds, max_len=max_len)
+
+
+decode_step = dlm.decode_step

@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (ShardingRules, activation_resolver,
+                                     batch_specs, param_specs)
+
+__all__ = ["ShardingRules", "activation_resolver", "batch_specs",
+           "param_specs"]

@@ -1,0 +1,3 @@
+from repro.runtime.elastic import ElasticRuntime, FailureEvent
+
+__all__ = ["ElasticRuntime", "FailureEvent"]

@@ -1,0 +1,129 @@
+"""Pure-pytree optimizers (no optax dependency).
+
+AdamW with decoupled weight decay, global-norm gradient clipping and
+warmup+cosine LR schedule. State is a pytree mirroring params, so it shards
+with the same PartitionSpecs as the parameters (ZeRO-style when params are
+FSDP-sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    mu: PyTree         # first moment, same dtype/shape as params (fp32)
+    nu: PyTree         # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    warmup_steps: int = 0
+    total_steps: int = 0          # 0 => constant LR after warmup
+    min_lr_ratio: float = 0.1
+    # Moment dtype. "bfloat16" halves optimizer HBM (the 16-bit-Adam trick
+    # used for the 236B/398B train cells — see DESIGN.md SS5); math stays
+    # fp32 (moments are upcast at the update).
+    moment_dtype: str = "float32"
+
+
+def _schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to min_lr_ratio (constant if total_steps=0)."""
+    step = step.astype(jnp.float32)
+    peak = jnp.asarray(cfg.learning_rate, jnp.float32)
+    if cfg.warmup_steps > 0:
+        warm = peak * (step + 1.0) / float(cfg.warmup_steps)
+    else:
+        warm = peak
+    if cfg.total_steps > 0:
+        frac = jnp.clip(
+            (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps),
+            0.0, 1.0)
+        cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        decayed = peak * cos
+    else:
+        decayed = peak
+    return jnp.where(step < cfg.warmup_steps, warm, decayed)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def adamw_init(params: PyTree, moment_dtype: str = "float32") -> AdamState:
+    mdt = jnp.bfloat16 if moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     mu=jax.tree.map(zeros, params),
+                     nu=jax.tree.map(zeros, params))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on biases / norm scales / 1-d params."""
+    names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+    joined = "/".join(str(n) for n in names)
+    return not any(t in joined for t in ("bias", "scale", "norm", "ln_"))
+
+
+def adamw_update(cfg: AdamWConfig, grads: PyTree, state: AdamState,
+                 params: PyTree) -> tuple[PyTree, AdamState, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    if cfg.grad_clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step
+    lr = _schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd_mu(g, m):
+        out = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g.astype(jnp.float32)
+        return out.astype(m.dtype)
+
+    def upd_nu(g, v):
+        g = g.astype(jnp.float32)
+        out = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        return out.astype(v.dtype)
+
+    mu = jax.tree.map(upd_mu, grads, state.mu)
+    nu = jax.tree.map(upd_nu, grads, state.nu)
+
+    def upd_param(path, p, m, v):
+        m = m.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+        update = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        if cfg.weight_decay > 0 and _decay_mask(path):
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map_with_path(upd_param, params, mu, nu)
+    new_state = AdamState(step=step + 1, mu=mu, nu=nu)
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+def sgd_update(lr: float, grads: PyTree, params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, g: (p.astype(jnp.float32)
+                                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+                        params, grads)

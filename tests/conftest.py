@@ -1,0 +1,39 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run sets its own
+# XLA_FLAGS in a subprocess). Keep compilation single-threaded friendly.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core import cost_model as cm
+from repro.core import train as gnn_train
+from repro.core.graph import paper_fleet46
+
+
+@pytest.fixture(scope="session")
+def four_tasks():
+    return cm.FOUR_TASKS
+
+
+@pytest.fixture(scope="session")
+def fleet46():
+    return paper_fleet46()
+
+
+@pytest.fixture(scope="session")
+def trained_gnn(fleet46, four_tasks):
+    """GNN trained once per test session on the 46-node fleet + 4 random
+    fleets (matches the benchmark configuration)."""
+    cfg = gnn_train.gnn_config_for(four_tasks)
+    ds = gnn_train.make_dataset(4, four_tasks, n_nodes=46, seed=1,
+                                label_frac=0.8)
+    ds.append(gnn_train.make_example(fleet46, four_tasks, seed=0))
+    params, hist = gnn_train.train_gnn(cfg, ds, steps=30, lr=0.01)
+    return params, cfg, hist

@@ -1,0 +1,106 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core.graph import paper_fig1_graph, random_fleet
+
+
+@pytest.fixture(scope="module")
+def g8():
+    return paper_fig1_graph()
+
+
+def test_routed_latency_never_worse(g8):
+    direct = g8.latency
+    routed = cm.routed_latency(direct)
+    mask = direct > 0
+    assert np.all(routed[mask] <= direct[mask] + 1e-5)
+    assert np.allclose(routed, routed.T, atol=1e-4)
+    assert np.all(np.diag(routed) == 0)
+
+
+def test_paper_comm_linear_in_bytes(g8):
+    comm = cm.PaperLinearComm(g8.latency)
+    t1 = comm.time_s(0, 1, 64)
+    t2 = comm.time_s(0, 1, 128)
+    assert t2 == pytest.approx(2 * t1)
+
+
+def test_alphabeta_has_latency_floor(g8):
+    comm = cm.AlphaBetaComm(g8.latency)
+    tiny = comm.time_s(0, 1, 1)
+    assert tiny >= g8.latency[0, 1] * 1e-3 * 0.5  # routed can only shrink so much
+
+
+def test_gpipe_single_machine_no_comm(g8):
+    comm = cm.make_comm(g8)
+    c, p = cm.gpipe_time(g8, [1], cm.BERT_LARGE, comm)
+    assert c == 0.0
+    assert p > 0 and np.isfinite(p)
+
+
+def test_gpipe_memory_infeasible(g8):
+    comm = cm.make_comm(g8)
+    c, p = cm.gpipe_time(g8, [6], cm.OPT_175B, comm)  # one small machine
+    assert not np.isfinite(c)
+
+
+def test_dp_requires_whole_model_fit(g8):
+    comm = cm.make_comm(g8)
+    giant = cm.ModelTask("giant", 1e12, 96, 12288)  # 2 TB of weights
+    c, p = cm.dp_time(g8, list(range(8)), giant, comm)
+    # no single machine holds 2 TB of weights in the 8-node example
+    assert not np.isfinite(c)
+    c2, p2 = cm.dp_time(g8, list(range(8)), cm.BERT_LARGE, comm)
+    assert np.isfinite(c2) and np.isfinite(p2)
+
+
+def test_tp_comm_scales_with_layers(g8):
+    comm = cm.make_comm(g8)
+    ids = list(range(8))
+    small = cm.ModelTask("x", 1e9, 12, 1024)
+    big = cm.ModelTask("y", 1e9, 24, 1024)
+    c1, _ = cm.tp_time(g8, ids, small, comm)
+    c2, _ = cm.tp_time(g8, ids, big, comm)
+    assert c2 == pytest.approx(2 * c1, rel=1e-6)
+
+
+def test_chain_order_is_permutation(g8):
+    order = cm.greedy_chain_order(g8, [0, 2, 4, 6])
+    assert sorted(order) == [0, 2, 4, 6]
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(min_value=1.5, max_value=10.0))
+def test_slower_links_never_speed_up_gpipe(scale):
+    """Property: uniformly increasing latency cannot reduce GPipe comm time."""
+    g = paper_fig1_graph()
+    comm1 = cm.PaperLinearComm(g.latency, route=False)
+    lat2 = g.latency * scale
+    comm2 = cm.PaperLinearComm(lat2, route=False)
+    ids = [0, 1, 2, 3]
+    c1, _ = cm.gpipe_time(g, ids, cm.GPT2_1_5B, comm1)
+    c2, _ = cm.gpipe_time(g, ids, cm.GPT2_1_5B, comm2)
+    assert c2 >= c1
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_makespan_at_most_sum(seed):
+    """Concurrent disjoint groups finish no later than running sequentially."""
+    g = random_fleet(12, seed=seed)
+    comm = cm.make_comm(g)
+    tasks = [cm.GPT2_1_5B, cm.BERT_LARGE]
+    groups = {"GPT-2": list(range(0, 6)), "BERT-large": list(range(6, 12))}
+    res = cm.placement_makespan(g, groups, tasks, comm)
+    per = res["per_task"]
+    total_seq = sum(c + p for c, p in per.values())
+    assert res["makespan"] <= total_seq + 1e-9
+
+
+def test_task_properties():
+    t = cm.OPT_175B
+    assert t.min_memory_gb == pytest.approx(175e9 * 16 / 1e9)
+    assert t.flops_per_step == pytest.approx(6 * 175e9 * t.batch_tokens)
+    assert t.param_bytes == pytest.approx(350e9)

@@ -1,0 +1,71 @@
+import numpy as np
+import pytest
+
+from repro.core.graph import (GPU_CATALOG, PAPER_LATENCY_TABLE, REGIONS,
+                              ClusterGraph, Machine, paper_fig1_graph,
+                              paper_fleet46, random_fleet, region_latency_ms)
+
+
+def test_paper_table1_values():
+    # spot-check the published Table 1 entries (ms per 64 bytes)
+    assert region_latency_ms("Beijing", "California") == pytest.approx(89.1)
+    assert region_latency_ms("Nanjing", "Rome") == pytest.approx(741.3)
+    assert region_latency_ms("California", "Tokyo") == pytest.approx(118.8)
+    # Beijing <-> Paris is blocked in the paper
+    assert np.isnan(region_latency_ms("Beijing", "Paris"))
+
+
+def test_fig1_graph_shape():
+    g = paper_fig1_graph()
+    assert g.n == 8
+    assert g.latency.shape == (8, 8)
+    assert np.allclose(g.latency, g.latency.T)
+    assert np.all(np.diag(g.latency) == 0)
+    feats = g.node_features()
+    assert feats.shape == (8, len(REGIONS) + 2)
+    # node 0 is the paper's {Beijing, 8.6, 152}-style machine
+    assert feats[0, REGIONS.index("Beijing")] == 1.0
+    assert g.machines[0].capability == 8.6
+
+
+def test_fleet46_counts():
+    g = paper_fleet46()
+    assert g.n == 46
+    assert sum(m.n_gpus for m in g.machines) == 368  # 368 GPUs in the paper
+
+
+def test_add_machine_scalability():
+    g = paper_fig1_graph()
+    m = Machine("Rome", "A40", 8)  # paper SS5.2: id 45 {Rome, ...}
+    g2 = g.add_machine(m)
+    assert g2.n == 9
+    assert g2.latency.shape == (9, 9)
+    assert np.allclose(g2.latency, g2.latency.T)
+    # new node connects to at least one old node
+    assert (g2.latency[8, :8] > 0).any()
+    # original graph untouched
+    assert g.n == 8
+
+
+def test_remove_machines_disaster():
+    g = paper_fig1_graph()
+    g2 = g.remove_machines([0, 3])
+    assert g2.n == 6
+    assert np.allclose(g2.latency, g2.latency.T)
+
+
+def test_subgraph_preserves_latency():
+    g = paper_fleet46()
+    ids = [3, 7, 11]
+    sub = g.subgraph(ids)
+    for a, i in enumerate(ids):
+        for b, j in enumerate(ids):
+            assert sub.latency[a, b] == g.latency[i, j]
+
+
+def test_machine_properties():
+    m = Machine("Tokyo", "A100", 8)
+    cap, mem, tflops = GPU_CATALOG["A100"]
+    assert m.capability == cap
+    assert m.memory_gb == mem * 8
+    assert m.tflops == tflops * 8

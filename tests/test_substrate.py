@@ -1,0 +1,138 @@
+"""Substrate tests: checkpoint manager, synthetic data pipeline, optimizer
+schedule, elastic runtime control plane."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import cost_model as cm
+from repro.core import train as gnn_train
+from repro.core.graph import Machine, paper_fleet46
+from repro.data.synthetic import SyntheticConfig, make_batch
+from repro.runtime import ElasticRuntime, FailureEvent
+from repro.training.optimizer import AdamWConfig, _schedule
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": [jnp.ones((4,), jnp.bfloat16), jnp.zeros((), jnp.int32)]}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_k=2)
+    t = _tree()
+    mgr.save(3, t, extra={"data_step": 3})
+    step, restored, meta = mgr.restore_latest(jax.tree.map(jnp.zeros_like, t))
+    assert step == 3 and meta["extra"]["data_step"] == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_keep_k_and_commit(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_k=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t)
+    assert mgr.committed_steps() == [3, 4]
+    # a crash-torn checkpoint (no COMMIT) is invisible
+    torn = os.path.join(str(tmp_path), "step_00000009")
+    os.makedirs(torn)
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_restores_previous_on_missing_commit(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_k=3)
+    t = _tree()
+    mgr.save(1, t)
+    path2 = mgr.save(2, t)
+    os.remove(os.path.join(path2, "COMMIT"))   # simulate crash mid-save
+    assert mgr.latest_step() == 1
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+def test_data_deterministic_and_sharded():
+    cfg = reduce_for_smoke(get_config("gemma3-1b"))
+    d1 = SyntheticConfig(global_batch=8, seq_len=16, seed=7, shard_id=0,
+                         num_shards=2)
+    d2 = SyntheticConfig(global_batch=8, seq_len=16, seed=7, shard_id=1,
+                         num_shards=2)
+    b1a = make_batch(cfg, d1, step=5)
+    b1b = make_batch(cfg, d1, step=5)
+    b2 = make_batch(cfg, d2, step=5)
+    np.testing.assert_array_equal(b1a["tokens"], b1b["tokens"])  # replayable
+    assert not np.array_equal(b1a["tokens"], b2["tokens"])       # disjoint
+    assert b1a["tokens"].shape == (4, 16)
+    # next-token labels, last masked
+    np.testing.assert_array_equal(b1a["labels"][:, :-1], b1a["tokens"][:, 1:])
+    assert (b1a["labels"][:, -1] == -100).all()
+
+
+def test_data_families():
+    audio = reduce_for_smoke(get_config("whisper-small"))
+    b = make_batch(audio, SyntheticConfig(global_batch=2, seq_len=8), 0)
+    assert b["frames"].shape == (2, audio.encoder_max_len, audio.d_model)
+    vlm = reduce_for_smoke(get_config("internvl2-1b"))
+    b = make_batch(vlm, SyntheticConfig(global_batch=2, seq_len=8), 0)
+    assert b["patches"].shape == (2, vlm.n_patches, vlm.vit_dim)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer schedule
+# ---------------------------------------------------------------------------
+def test_warmup_cosine_schedule():
+    cfg = AdamWConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lr0 = float(_schedule(cfg, jnp.int32(0)))
+    lr9 = float(_schedule(cfg, jnp.int32(9)))
+    lr10 = float(_schedule(cfg, jnp.int32(10)))
+    lr99 = float(_schedule(cfg, jnp.int32(99)))
+    assert lr0 < lr9 <= lr10 <= 1e-3 * (1 + 1e-5)  # fp32 peak
+    assert abs(lr99 - 1e-4) < 2e-5   # decays to min ratio
+
+
+# ---------------------------------------------------------------------------
+# Elastic runtime (control plane)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def runtime():
+    tasks = cm.FOUR_TASKS
+    fleet = paper_fleet46()
+    cfg = gnn_train.gnn_config_for(tasks)
+    ds = gnn_train.make_dataset(3, tasks, n_nodes=46, seed=2, label_frac=0.8)
+    params, _ = gnn_train.train_gnn(cfg, ds, steps=20, lr=0.01)
+    return ElasticRuntime(fleet, tasks, params, cfg)
+
+
+def test_elastic_failure_recovers(runtime):
+    groups0 = {k: list(v) for k, v in runtime.assignment.groups.items()}
+    victim_task = max(groups0, key=lambda k: len(groups0[k]))
+    victims = groups0[victim_task][:2]
+    report = runtime.on_failure(FailureEvent(failed_ids=victims, at_step=100))
+    assert victim_task in report["affected_tasks"]
+    assert victim_task in report["restore_from_checkpoint"]
+    # every surviving group is memory-feasible
+    by_name = {t.name: t for t in runtime.tasks}
+    mem = runtime.graph.memory_gb()
+    for name, ids in runtime.assignment.groups.items():
+        assert sum(mem[i] for i in ids) >= by_name[name].min_memory_gb
+    # no machine serves two tasks
+    all_ids = [i for ids in runtime.assignment.groups.values() for i in ids]
+    assert len(all_ids) == len(set(all_ids))
+
+
+def test_elastic_join(runtime):
+    n_before = runtime.graph.n
+    report = runtime.on_join(Machine("Rome", "A100", 8))
+    assert runtime.graph.n == n_before + 1
+    assert report["event"] == "join"
