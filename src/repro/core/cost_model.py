@@ -98,6 +98,26 @@ class PaperLinearComm:
         return lat * MS * nbytes / 64.0
 
 
+def link_bandwidth(lat_ms: float, model: str = "alphabeta") -> float:
+    """Bytes/s capacity of a link with the given latency. Single source of
+    truth shared by the analytic comm models and the repro.sim network model
+    (whose zero-contention limit must equal them, asserted in tests):
+
+    * ``alphabeta`` — class inferred from the latency (LAN 10 GB/s down to
+      0.05 GB/s intercontinental);
+    * ``paper``     — the paper's Table 1 semantics, where lat_ms is the time
+      to move 64 bytes (so the "bandwidth" is 64 bytes / lat)."""
+    if model == "paper":
+        return 64.0 / (lat_ms * MS)
+    if lat_ms <= 2.0:
+        return 10e9        # same-region LAN
+    if lat_ms <= 120.0:
+        return 1e9         # good WAN
+    if lat_ms <= 250.0:
+        return 0.3e9
+    return 0.05e9          # poor intercontinental link
+
+
 class AlphaBetaComm:
     """time = latency + bytes/bandwidth; bandwidth inferred from latency class."""
 
@@ -105,14 +125,7 @@ class AlphaBetaComm:
         self.lat = routed_latency(latency_ms) if route else latency_ms
 
     def bandwidth(self, i: int, j: int) -> float:
-        lat = self.lat[i, j]
-        if lat <= 2.0:
-            return 10e9        # same-region LAN
-        if lat <= 120.0:
-            return 1e9         # good WAN
-        if lat <= 250.0:
-            return 0.3e9
-        return 0.05e9          # poor intercontinental link
+        return link_bandwidth(float(self.lat[i, j]))
 
     def time_s(self, i: int, j: int, nbytes: float) -> float:
         if i == j:
@@ -136,6 +149,21 @@ def _fits_whole_model(graph: ClusterGraph, ids: Sequence[int], task: ModelTask):
     return [i for i in ids if mem[i] * 1e9 >= task.param_bytes]
 
 
+def dp_best_server(fit: Sequence[int], task: ModelTask,
+                   comm) -> tuple[int, float]:
+    """Parameter-server choice for DP sync: the fitting machine minimizing the
+    worst worker exchange time of 2 x P bytes. Shared by the analytic model
+    and the discrete-event simulator (repro.sim) so both place the PS on the
+    same machine. Returns (server id, worst exchange seconds)."""
+    best_server, best = fit[0], np.inf
+    for server in fit:
+        worst = max((comm.time_s(i, server, 2 * task.param_bytes)
+                     for i in fit if i != server), default=0.0)
+        if worst < best:
+            best_server, best = server, worst
+    return best_server, best
+
+
 def dp_time(graph: ClusterGraph, ids: Sequence[int], task: ModelTask,
             comm) -> tuple[float, float]:
     """System A: data parallelism over machines that can hold the full model;
@@ -147,11 +175,7 @@ def dp_time(graph: ClusterGraph, ids: Sequence[int], task: ModelTask,
     total = sum(tf[i] for i in fit)
     compute = task.flops_per_step / (total * 1e12)
     # PS at the best-connected fitting machine; each worker exchanges 2 x P.
-    best = np.inf
-    for server in fit:
-        worst = max((comm.time_s(i, server, 2 * task.param_bytes)
-                     for i in fit if i != server), default=0.0)
-        best = min(best, worst)
+    _, best = dp_best_server(fit, task, comm)
     return best, compute
 
 

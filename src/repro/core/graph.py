@@ -76,20 +76,39 @@ GPU_CATALOG = {
 
 @dataclasses.dataclass
 class Machine:
+    """A fleet node. Capability/memory/tflops normally derive from the GPU
+    catalog; nodes that are not catalog GPUs (TPU pods, custom hosts) carry
+    explicit values via the ``*_override`` fields or ``Machine.from_caps``."""
     region: str
     gpu: str
     n_gpus: int = 8
+    capability_override: float | None = None
+    memory_gb_override: float | None = None
+    tflops_override: float | None = None
+
+    @classmethod
+    def from_caps(cls, region: str, capability: float, memory_gb: float,
+                  tflops: float, label: str = "custom") -> "Machine":
+        """A machine described by its capabilities instead of a GPU model."""
+        return cls(region, label, n_gpus=1, capability_override=capability,
+                   memory_gb_override=memory_gb, tflops_override=tflops)
 
     @property
     def capability(self) -> float:
+        if self.capability_override is not None:
+            return self.capability_override
         return GPU_CATALOG[self.gpu][0]
 
     @property
     def memory_gb(self) -> float:
+        if self.memory_gb_override is not None:
+            return self.memory_gb_override
         return GPU_CATALOG[self.gpu][1] * self.n_gpus
 
     @property
     def tflops(self) -> float:
+        if self.tflops_override is not None:
+            return self.tflops_override
         return GPU_CATALOG[self.gpu][2] * self.n_gpus
 
 

@@ -34,18 +34,16 @@ def pods_as_graph(pods: Sequence[PodSpec],
                   latency_ms: np.ndarray) -> ClusterGraph:
     """Represent pods as Hulk graph nodes. Capability ~ tflops/chip scaled to
     the paper's 0-10ish feature range; memory = total HBM."""
-    machines = []
-    for p in pods:
-        m = Machine(p.region, "A100", 8)  # placeholder catalog entry
-        machines.append(m)
-    g = ClusterGraph(machines, latency_ms.astype(np.float32))
-
-    # overwrite the derived features with pod truth via closures
-    mem = np.array([p.hbm_gb_per_chip * p.chips for p in pods], np.float32)
-    tf = np.array([p.tflops_per_chip * p.chips for p in pods], np.float32)
-    g.memory_gb = lambda: mem          # type: ignore[method-assign]
-    g.tflops = lambda: tf              # type: ignore[method-assign]
-    return g
+    machines = [
+        Machine.from_caps(
+            p.region,
+            capability=min(10.0, p.tflops_per_chip / 30.0),
+            memory_gb=p.hbm_gb_per_chip * p.chips,
+            tflops=p.tflops_per_chip * p.chips,
+            label=p.name)
+        for p in pods
+    ]
+    return ClusterGraph(machines, latency_ms.astype(np.float32))
 
 
 @dataclasses.dataclass

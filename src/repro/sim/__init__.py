@@ -1,0 +1,28 @@
+"""repro.sim — deterministic discrete-event geo-fleet simulator.
+
+Replays training schedules produced by ``core.assign`` /
+``core.placement.plan_runtime`` over a ``ClusterGraph``, modeling per-link
+bandwidth with fair-share contention, per-machine compute with straggler
+jitter, pipeline bubbles, DP parameter-server sync, TP all-reduce rings, and
+fault events that trigger ``runtime.elastic`` re-planning mid-run.
+
+Calibration contract: with no contention, no jitter and no faults, the
+simulated per-step time of each parallelism strategy equals the analytic
+``core.cost_model`` prediction (``AlphaBetaComm`` / ``PaperLinearComm`` are
+the zero-contention limits of ``sim.network.NetworkModel``) — asserted in
+``tests/test_sim.py``.
+"""
+from repro.sim.compute import ComputeModel, JitterConfig
+from repro.sim.engine import Simulator
+from repro.sim.evaluate import (FleetSimulation, SimResult, comparison_table,
+                                evaluate_all, evaluate_scenario,
+                                simulate_single)
+from repro.sim.network import NetworkModel
+from repro.sim.scenarios import SCENARIOS, Scenario, get_scenario, register
+
+__all__ = [
+    "Simulator", "NetworkModel", "ComputeModel", "JitterConfig",
+    "Scenario", "SCENARIOS", "register", "get_scenario",
+    "FleetSimulation", "SimResult", "simulate_single",
+    "evaluate_scenario", "evaluate_all", "comparison_table",
+]

@@ -1,0 +1,61 @@
+"""Per-machine compute model with straggler jitter.
+
+Durations are ``work_flops / (tflops * 1e12)`` scaled by two factors:
+
+* a persistent per-machine straggler multiplier (a seeded fraction of the
+  fleet runs ``straggler_slowdown`` x slower — thermal throttling, noisy
+  neighbours, degraded HBM), and
+* a per-operation lognormal jitter ``exp(sigma * z)`` with ``z`` drawn from
+  an RNG keyed on ``(seed, machine, step, microbatch, tag)`` — *counter-based*
+  randomness, so a duration never depends on event execution order and the
+  whole simulation stays deterministic and replayable.
+
+With ``JitterConfig()`` (all zeros) durations equal the analytic
+``core.cost_model`` compute times exactly — the calibration limit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.graph import ClusterGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class JitterConfig:
+    sigma: float = 0.0               # lognormal sigma per compute op
+    straggler_frac: float = 0.0      # fraction of machines persistently slow
+    straggler_slowdown: float = 1.0  # their multiplicative slowdown (>= 1)
+
+
+class ComputeModel:
+    def __init__(self, graph: ClusterGraph, jitter: JitterConfig | None = None,
+                 seed: int = 0):
+        self.graph = graph
+        self.jitter = jitter or JitterConfig()
+        self.seed = seed
+        self.tflops = graph.tflops()
+        self.slow_factor = np.ones(graph.n)
+        if self.jitter.straggler_frac > 0 and self.jitter.straggler_slowdown > 1:
+            k = max(1, int(round(self.jitter.straggler_frac * graph.n)))
+            rng = np.random.default_rng((seed, 0x57A6))
+            slow = rng.choice(graph.n, size=min(k, graph.n), replace=False)
+            self.slow_factor[slow] = self.jitter.straggler_slowdown
+        self.busy_s = np.zeros(graph.n)  # accounting: total busy time/machine
+
+    def stragglers(self) -> list[int]:
+        return [int(i) for i in np.nonzero(self.slow_factor > 1.0)[0]]
+
+    def duration(self, machine: int, work_flops: float, step: int = 0,
+                 microbatch: int = 0, tag: int = 0) -> float:
+        base = work_flops / (float(self.tflops[machine]) * 1e12)
+        f = float(self.slow_factor[machine])
+        if self.jitter.sigma > 0:
+            rng = np.random.default_rng(
+                (self.seed, machine, step, microbatch, tag))
+            f *= math.exp(self.jitter.sigma * float(rng.standard_normal()))
+        d = base * f
+        self.busy_s[machine] += d
+        return d

@@ -1,0 +1,99 @@
+"""Deterministic event-heap engine.
+
+The heap orders events by (time, sequence number); the sequence number makes
+simultaneous events fire in scheduling order, so a run is a pure function of
+its inputs — no wall clock, no global RNG. Events are cancellable handles
+(needed by the network model, which reschedules flow completions whenever
+fair-share rates change) and carry an *epoch* guard: bumping the simulator
+epoch invalidates every event scheduled under an older epoch, which is how a
+fault-triggered re-plan aborts all in-flight work without unwinding the heap.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from typing import Any, Callable, Optional
+
+
+class Event:
+    """Handle for a scheduled callback; ``cancel()`` is O(1)."""
+
+    __slots__ = ("time", "seq", "fn", "args", "cancelled", "epoch")
+
+    def __init__(self, time: float, seq: int, fn: Callable, args: tuple,
+                 epoch: int):
+        self.time = time
+        self.seq = seq
+        self.fn = fn
+        self.args = args
+        self.cancelled = False
+        self.epoch = epoch
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+    def __lt__(self, other: "Event") -> bool:
+        return (self.time, self.seq) < (other.time, other.seq)
+
+
+class Simulator:
+    def __init__(self):
+        self.now: float = 0.0
+        self.epoch: int = 0
+        self.n_fired: int = 0
+        self._heap: list[Event] = []
+        self._seq = itertools.count()
+
+    def schedule(self, delay: float, fn: Callable, *args: Any,
+                 pin_epoch: bool = True) -> Event:
+        """Schedule ``fn(*args)`` at ``now + delay``. Events scheduled with
+        ``pin_epoch=True`` (the default) are dropped if the simulator epoch
+        advances before they fire; pass ``pin_epoch=False`` for control-plane
+        events (fault injection, periodic ticks) that must survive re-plans."""
+        if not (delay >= 0.0) or math.isinf(delay):
+            raise ValueError(f"bad event delay: {delay!r}")
+        ev = Event(self.now + delay, next(self._seq), fn, args,
+                   self.epoch if pin_epoch else -1)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def bump_epoch(self) -> int:
+        """Invalidate every epoch-pinned event currently in the heap."""
+        self.epoch += 1
+        return self.epoch
+
+    def run(self, until: float = math.inf, max_events: int = 20_000_000) -> float:
+        """Drain the heap (up to ``until``); returns the final sim time."""
+        while self._heap:
+            ev = self._heap[0]
+            if ev.time > until:
+                break
+            heapq.heappop(self._heap)
+            if ev.cancelled or (ev.epoch >= 0 and ev.epoch != self.epoch):
+                continue
+            self.now = ev.time
+            self.n_fired += 1
+            if self.n_fired > max_events:
+                raise RuntimeError(f"simulation exceeded {max_events} events")
+            ev.fn(*ev.args)
+        return self.now
+
+
+class Barrier:
+    """Fire ``done`` after ``n`` arrivals (parallel-phase join)."""
+
+    __slots__ = ("n", "done")
+
+    def __init__(self, n: int, done: Callable[[], None]):
+        if n <= 0:
+            done()
+            self.n = 0
+        else:
+            self.n = n
+        self.done = done
+
+    def arrive(self) -> None:
+        self.n -= 1
+        if self.n == 0:
+            self.done()

@@ -1,0 +1,436 @@
+"""Run placements through the simulator and score Hulk vs the baselines.
+
+``FleetSimulation`` drives one system (one placer) through a scenario: it
+replays ``steps`` training steps of every task over the shared network, fires
+the scenario's fault schedule (each fault bumps the sim epoch, aborts all
+in-flight work, asks the placer to re-plan — the Hulk placer delegates to
+``runtime.elastic.ElasticRuntime`` — and restarts the interrupted steps on
+the new placement), and reports per-task step times plus the makespan.
+
+``evaluate_scenario`` / ``evaluate_all`` run Hulk and Systems A/B/C (the
+``core.baselines`` strategies) across the scenario registry and emit the
+comparison table the benchmark harness prints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import assign as assign_mod
+from repro.core import cost_model as cm
+from repro.core import placement as placement_mod
+from repro.core import train as gnn_train
+from repro.core.graph import ClusterGraph
+from repro.runtime import ElasticRuntime, FailureEvent
+from repro.sim import scenarios as sc
+from repro.sim.compute import ComputeModel, JitterConfig
+from repro.sim.engine import Simulator
+from repro.sim.network import NetworkModel
+from repro.sim.workload import analytic_step_time, run_step
+
+
+@dataclasses.dataclass
+class Placement:
+    ids: list[int]
+    strategy: str                 # "dp" | "gpipe" | "tp"
+    order: list[int]              # stage order (gpipe); ids otherwise
+
+
+# ---------------------------------------------------------------------------
+# Placers: produce placements and handle fault-time re-planning
+# ---------------------------------------------------------------------------
+class StaticPlacer:
+    """Fixed placements; no fault handling (calibration runs)."""
+
+    name = "static"
+
+    def __init__(self, placements: dict[str, Placement]):
+        self._placements = placements
+
+    def place(self, graph: ClusterGraph) -> dict[str, Placement]:
+        return dict(self._placements)
+
+    def on_failure(self, failed_ids: Sequence[int], at_step: int):
+        raise NotImplementedError("StaticPlacer cannot re-plan")
+
+
+class FullFleetPlacer:
+    """Systems A/B/C: every task occupies the whole fleet with one strategy;
+    on failure the group is simply the survivors."""
+
+    def __init__(self, strategy: str, tasks: Sequence[cm.ModelTask],
+                 name: str):
+        self.strategy = strategy
+        self.tasks = list(tasks)
+        self.name = name
+        self.graph: Optional[ClusterGraph] = None
+
+    def _placements(self) -> dict[str, Placement]:
+        ids = list(range(self.graph.n))
+        order = (cm.greedy_chain_order(self.graph, ids)
+                 if self.strategy == "gpipe" else ids)
+        return {t.name: Placement(list(ids), self.strategy, list(order))
+                for t in self.tasks}
+
+    def place(self, graph: ClusterGraph) -> dict[str, Placement]:
+        self.graph = graph
+        return self._placements()
+
+    def on_failure(self, failed_ids: Sequence[int], at_step: int):
+        self.graph = self.graph.remove_machines(list(failed_ids))
+        return self.graph, self._placements()
+
+
+class HulkPlacer:
+    """GNN task assignment via ``core.assign``; per-group parallelism chosen
+    by ``core.placement.plan_runtime`` (DP gradient sync vs pipeline
+    activations, whichever moves fewer bytes over the slow links); fault
+    re-planning delegated to ``runtime.elastic.ElasticRuntime``."""
+
+    name = "Hulk"
+
+    def __init__(self, tasks: Sequence[cm.ModelTask], params, cfg,
+                 comm_model: str = "alphabeta", use_runtime_plan: bool = True):
+        self.tasks = list(tasks)
+        self.params = params
+        self.cfg = cfg
+        self.comm_model = comm_model
+        self.use_runtime_plan = use_runtime_plan
+        self.rt: Optional[ElasticRuntime] = None
+
+    def _placements(self, graph: ClusterGraph,
+                    assignment: assign_mod.Assignment) -> dict[str, Placement]:
+        comm = cm.make_comm(graph, self.comm_model)
+        by_name = {t.name: t for t in self.tasks}
+        out: dict[str, Placement] = {}
+        plans = {}
+        if self.use_runtime_plan:
+            plans = {p.task: p for p in placement_mod.plan_runtime(
+                graph, assignment.groups, self.tasks)}
+        for name, ids in assignment.groups.items():
+            task = by_name[name]
+            order = assignment.stage_order.get(name) or list(ids)
+            strategy = "gpipe"
+            plan = plans.get(name)
+            if plan is not None and plan.pod_axis_strategy == "dp":
+                # plan_runtime compares traffic only; honour it when DP is
+                # actually memory-feasible, else stay on the pipeline.
+                dp_c, _ = cm.dp_time(graph, ids, task, comm)
+                if math.isfinite(dp_c):
+                    strategy = "dp"
+            if plan is not None and plan.pod_axis_strategy == "pipeline":
+                order = list(plan.stage_order)
+            out[name] = Placement(list(ids), strategy, list(order))
+        return out
+
+    def place(self, graph: ClusterGraph) -> dict[str, Placement]:
+        self.rt = ElasticRuntime(graph, self.tasks, self.params, self.cfg)
+        return self._placements(self.rt.graph, self.rt.assignment)
+
+    def on_failure(self, failed_ids: Sequence[int], at_step: int):
+        self.rt.on_failure(FailureEvent(list(failed_ids), at_step))
+        return self.rt.graph, self._placements(self.rt.graph,
+                                               self.rt.assignment)
+
+
+# ---------------------------------------------------------------------------
+# The fleet simulation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _TaskRun:
+    task: cm.ModelTask
+    steps_done: int = 0
+    step_times: list = dataclasses.field(default_factory=list)
+    compute_s: float = 0.0
+    comm_s: float = 0.0
+    finish_time: Optional[float] = None
+    failed: bool = False
+
+
+@dataclasses.dataclass
+class SimResult:
+    system: str
+    per_task: dict[str, dict]
+    makespan: float
+    compute_s: float
+    comm_s: float
+    replans: list[dict]
+    n_events: int
+    bytes_moved: float
+    stragglers: list[int]
+
+    def mean_step_s(self, task: str) -> float:
+        ts = self.per_task[task]["step_times"]
+        return float(np.mean(ts)) if ts else math.inf
+
+
+class FleetSimulation:
+    def __init__(self, graph: ClusterGraph, tasks: Sequence[cm.ModelTask],
+                 placer, *, comm_model: str = "alphabeta",
+                 jitter: Optional[JitterConfig] = None,
+                 traffic: Optional[sc.TrafficBuilder] = None,
+                 fault_fracs: Sequence[float] = (),
+                 kills_per_fault: int = 1,
+                 steps: int = 3, seed: int = 0, concurrent: bool = True):
+        self.graph = graph
+        self.tasks = list(tasks)
+        self.placer = placer
+        self.comm_model = comm_model
+        self.jitter = jitter or JitterConfig()
+        self.traffic = traffic
+        self.fault_fracs = tuple(fault_fracs)
+        self.kills_per_fault = kills_per_fault
+        self.steps = steps
+        self.seed = seed
+        self.concurrent = concurrent
+
+        self.sim = Simulator()
+        self.placements: dict[str, Placement] = {}
+        self.runs = {t.name: _TaskRun(task=t) for t in self.tasks}
+        self.replans: list[dict] = []
+        self._queue: list[str] = []       # sequential mode
+        self._bytes_retired = 0.0
+        self._stragglers: list[int] = []
+
+    # -- model (re)construction --------------------------------------------
+    def _estimate_horizon(self) -> float:
+        """Analytic run-length estimate used to anchor fault times and the
+        diurnal period (coarse is fine: fractions of roughly-the-run)."""
+        comm = cm.make_comm(self.graph, self.comm_model)
+        times = []
+        for name, pl in self.placements.items():
+            c, p = analytic_step_time(self.graph, pl.ids,
+                                      self.runs[name].task, comm,
+                                      pl.strategy, pl.order)
+            if math.isfinite(c + p):
+                times.append((c + p) * self.steps)
+        if not times:
+            return 1000.0
+        return max(times) if self.concurrent else sum(times)
+
+    def _build_models(self, horizon: float) -> None:
+        scale = self.traffic(self.graph, horizon) if self.traffic else None
+        self.net = NetworkModel(self.graph, self.comm_model,
+                                capacity_scale=scale)
+        self.compute = ComputeModel(self.graph, self.jitter, seed=self.seed)
+        self._comm = cm.make_comm(self.graph, self.comm_model)
+        self._stragglers = self.compute.stragglers()
+
+    # -- task stepping ------------------------------------------------------
+    def _feasible(self, run: _TaskRun, pl: Placement) -> bool:
+        c, p = analytic_step_time(self.graph, pl.ids, run.task, self._comm,
+                                  pl.strategy, pl.order)
+        return math.isfinite(c + p)
+
+    def _start_step(self, name: str) -> None:
+        run = self.runs[name]
+        pl = self.placements.get(name)
+        if pl is None or not pl.ids or not self._feasible(run, pl):
+            self._task_over(name, failed=True)
+            return
+        t_start = self.sim.now
+
+        def done(comp_s: float, comm_s: float) -> None:
+            run.step_times.append(self.sim.now - t_start)
+            run.compute_s += comp_s
+            run.comm_s += comm_s
+            run.steps_done += 1
+            if run.steps_done >= self.steps:
+                self._task_over(name, failed=False)
+            else:
+                self._start_step(name)
+
+        run_step(self.sim, self.net, self.compute, self.graph, run.task,
+                 pl.ids, pl.strategy, pl.order, run.steps_done, done,
+                 comm=self._comm)
+
+    def _task_over(self, name: str, failed: bool) -> None:
+        run = self.runs[name]
+        run.failed = failed
+        run.finish_time = None if failed else self.sim.now
+        if not self.concurrent and self._queue:
+            self._start_step(self._queue.pop(0))
+
+    # -- faults -------------------------------------------------------------
+    def _fire_fault(self, k: int) -> None:
+        alive = [r for r in self.runs.values()
+                 if r.finish_time is None and not r.failed]
+        if not alive:
+            return  # nothing left to disrupt (run over or capacity exhausted)
+        pool = sorted({i for pl in self.placements.values() for i in pl.ids})
+        if len(pool) <= 1:
+            return
+        rng = np.random.default_rng((self.seed, 0xFA17, k))
+        kills = min(self.kills_per_fault, len(pool) - 1)
+        victims = sorted(int(i) for i in
+                         rng.choice(pool, size=kills, replace=False))
+        self.sim.bump_epoch()
+        self.net.reset()
+        try:
+            self.graph, self.placements = self.placer.on_failure(
+                victims, at_step=max(r.steps_done for r in self.runs.values()))
+        except assign_mod.PlacementError:
+            # survivors can't host the tasks at all: everything unfinished dies
+            # (self.net stays in place, so its bytes are counted exactly once)
+            for run in self.runs.values():
+                if run.finish_time is None:
+                    run.failed = True
+            self._queue.clear()
+            return
+        self.replans.append({"at_s": self.sim.now, "killed": victims,
+                             "fault_index": k})
+        self._bytes_retired += self.net.bytes_moved  # old net is replaced next
+        self._build_models(self._estimate_horizon())
+        # interrupted steps restart on the new placement (progress since the
+        # last completed step is lost — checkpoint-restore semantics)
+        if self.concurrent:
+            for name, run in self.runs.items():
+                if run.finish_time is None and not run.failed:
+                    self._start_step(name)
+        else:
+            running = [name for name, run in self.runs.items()
+                       if run.finish_time is None and not run.failed
+                       and name not in self._queue]
+            for name in running:
+                self._start_step(name)
+
+    # -- entry point --------------------------------------------------------
+    def run(self) -> SimResult:
+        self.placements = self.placer.place(self.graph)
+        horizon = self._estimate_horizon()
+        self._build_models(horizon)
+        names = [t.name for t in self.tasks]
+        if self.concurrent:
+            for name in names:
+                self._start_step(name)
+        else:
+            self._queue = names[1:]
+            self._start_step(names[0])
+        for k, frac in enumerate(self.fault_fracs):
+            if math.isfinite(horizon) and horizon > 0:
+                self.sim.schedule(frac * horizon, self._fire_fault, k,
+                                  pin_epoch=False)
+        self.sim.run()
+
+        per_task = {}
+        finishes = []
+        for name, run in self.runs.items():
+            per_task[name] = {
+                "step_times": list(run.step_times),
+                "mean_step_s": (float(np.mean(run.step_times))
+                                if run.step_times else math.inf),
+                "compute_s": run.compute_s, "comm_s": run.comm_s,
+                "finish_s": run.finish_time, "failed": run.failed,
+            }
+            finishes.append(math.inf if run.failed or run.finish_time is None
+                            else run.finish_time)
+        makespan = max(finishes) if finishes else math.inf
+        return SimResult(
+            system=getattr(self.placer, "name", "?"),
+            per_task=per_task, makespan=float(makespan),
+            compute_s=float(sum(r.compute_s for r in self.runs.values())),
+            comm_s=float(sum(r.comm_s for r in self.runs.values())),
+            replans=list(self.replans), n_events=self.sim.n_fired,
+            bytes_moved=float(self._bytes_retired + self.net.bytes_moved),
+            stragglers=list(self._stragglers))
+
+
+# ---------------------------------------------------------------------------
+# Convenience entry points
+# ---------------------------------------------------------------------------
+def simulate_single(graph: ClusterGraph, ids: Sequence[int],
+                    task: cm.ModelTask, strategy: str, *,
+                    comm_model: str = "alphabeta", steps: int = 1,
+                    seed: int = 0, jitter: Optional[JitterConfig] = None,
+                    order: Optional[Sequence[int]] = None) -> SimResult:
+    """One task, one placement — the calibration harness."""
+    order = list(order) if order is not None \
+        else cm.greedy_chain_order(graph, ids)
+    placer = StaticPlacer({task.name: Placement(list(ids), strategy, order)})
+    fs = FleetSimulation(graph, [task], placer, comm_model=comm_model,
+                         jitter=jitter, steps=steps, seed=seed)
+    return fs.run()
+
+
+_GNN_CACHE: dict = {}
+
+
+def trained_gnn(tasks: Sequence[cm.ModelTask], seed: int = 0):
+    """Train (and cache) the Hulk placement GNN for a task set."""
+    key = (tuple(t.name for t in tasks), seed)
+    if key not in _GNN_CACHE:
+        cfg = gnn_train.gnn_config_for(tasks)
+        ds = gnn_train.make_dataset(3, tasks, n_nodes=12, seed=seed + 11,
+                                    label_frac=0.8)
+        params, _ = gnn_train.train_gnn(cfg, ds, steps=15, lr=0.01, seed=seed)
+        _GNN_CACHE[key] = (params, cfg)
+    return _GNN_CACHE[key]
+
+
+def evaluate_scenario(scenario: sc.Scenario, seed: int = 0) -> dict:
+    """Score Hulk and Systems A/B/C on one scenario. Returns
+    {system: metrics} plus the Hulk improvement vs the best baseline."""
+    graph = scenario.fleet(seed)
+    tasks = list(scenario.tasks)
+    params, cfg = trained_gnn(tasks, seed=0)
+
+    systems: list[tuple[str, object, bool]] = [
+        ("Hulk", HulkPlacer(tasks, params, cfg,
+                            comm_model=scenario.comm_model), True),
+        ("SystemA", FullFleetPlacer("dp", tasks, "SystemA"), False),
+        ("SystemB", FullFleetPlacer("gpipe", tasks, "SystemB"), False),
+        ("SystemC", FullFleetPlacer("tp", tasks, "SystemC"), False),
+    ]
+    rows: dict = {"scenario": scenario.name}
+    for name, placer, concurrent in systems:
+        try:
+            res = FleetSimulation(
+                graph, tasks, placer, comm_model=scenario.comm_model,
+                jitter=scenario.jitter, traffic=scenario.traffic,
+                fault_fracs=scenario.fault_fracs,
+                kills_per_fault=scenario.kills_per_fault,
+                steps=scenario.steps, seed=seed,
+                concurrent=concurrent).run()
+            rows[name] = {
+                "makespan_s": res.makespan,
+                "compute_s": res.compute_s, "comm_s": res.comm_s,
+                "replans": len(res.replans), "n_events": res.n_events,
+                "failed": sorted(t for t, d in res.per_task.items()
+                                 if d["failed"]),
+                "mean_step_s": {t: d["mean_step_s"]
+                                for t, d in res.per_task.items()},
+            }
+        except assign_mod.PlacementError as e:
+            rows[name] = {"makespan_s": math.inf, "error": str(e)}
+    baselines = [rows[n]["makespan_s"] for n in ("SystemA", "SystemB",
+                                                 "SystemC")]
+    best = min(baselines)
+    hulk = rows["Hulk"]["makespan_s"]
+    rows["improvement_vs_best_baseline"] = (
+        (best - hulk) / best if math.isfinite(best) and best > 0 else math.nan)
+    return rows
+
+
+def evaluate_all(seed: int = 0,
+                 names: Optional[Sequence[str]] = None) -> dict[str, dict]:
+    names = list(names) if names is not None else sorted(sc.SCENARIOS)
+    return {n: evaluate_scenario(sc.get_scenario(n), seed=seed) for n in names}
+
+
+def comparison_table(results: dict[str, dict]) -> str:
+    """Text table: scenario x system makespans + Hulk improvement."""
+    systems = ["Hulk", "SystemA", "SystemB", "SystemC"]
+    head = f"{'scenario':<20}" + "".join(f"{s:>12}" for s in systems) \
+        + f"{'hulk_gain':>11}"
+    lines = [head, "-" * len(head)]
+    for name, row in results.items():
+        def fmt(x: float) -> str:
+            return f"{x:>12.1f}" if math.isfinite(x) else f"{'inf':>12}"
+        cells = "".join(fmt(row[s]["makespan_s"]) for s in systems)
+        gain = row["improvement_vs_best_baseline"]
+        gain_s = f"{gain:>10.1%}" if math.isfinite(gain) else f"{'n/a':>10}"
+        lines.append(f"{name:<20}{cells} {gain_s}")
+    return "\n".join(lines)

@@ -1,0 +1,218 @@
+"""Flow-level network model with per-link fair-share contention.
+
+Each physical link (a machine pair with a direct latency edge) is a resource
+with a bandwidth capacity; a transfer is a *flow* that occupies every link on
+its route. Blocked pairs (latency 0 in the ``ClusterGraph``) relay through the
+``core.cost_model.routed_latency`` shortest path, so relay hubs become shared
+— and therefore contended — resources.
+
+Rate assignment is the classic bottleneck approximation: a flow's rate is
+
+    min( end-to-end cap,  min over links on its path of  cap_link / n_flows )
+
+recomputed whenever a flow starts or finishes (and on periodic ticks when a
+time-varying ``capacity_scale`` is installed, e.g. diurnal traffic).
+
+Calibration contract (asserted in tests): a *single* flow from i to j takes
+exactly ``core.cost_model``'s communication time —
+
+* ``comm_model="alphabeta"``: ``routed_lat_ms * 1e-3 + bytes / bw(routed)``,
+  identical to ``AlphaBetaComm.time_s`` (zero-contention limit);
+* ``comm_model="paper"``:     ``routed_lat_ms * 1e-3 * bytes / 64``,
+  identical to ``PaperLinearComm.time_s``.
+
+This holds because link capacities only decrease with latency, every link on
+a route has latency <= the routed end-to-end latency, and a lone flow is
+capped by the end-to-end term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.graph import ClusterGraph
+from repro.sim.engine import Event, Simulator
+
+MS = 1e-3
+# Rebalance-tick period (in sim seconds) when capacity_scale is time-varying;
+# bounds how stale a fair-share rate can get between flow events.
+TICK_S = 50.0
+
+
+def _paths(latency_ms: np.ndarray) -> tuple[np.ndarray, list[list[list[int]]]]:
+    """Routed latency matrix + the node path realizing it for every pair."""
+    from scipy.sparse.csgraph import shortest_path
+    w = latency_ms.astype(np.float64).copy()
+    w[w <= 0] = np.inf
+    np.fill_diagonal(w, 0.0)
+    dist, pred = shortest_path(w, method="D", directed=False,
+                               return_predecessors=True)
+    n = latency_ms.shape[0]
+    paths: list[list[list[int]]] = [[[] for _ in range(n)] for _ in range(n)]
+    for i in range(n):
+        for j in range(n):
+            if i == j or not np.isfinite(dist[i, j]):
+                continue
+            path = [j]
+            k = j
+            while k != i:
+                k = int(pred[i, k])
+                path.append(k)
+            paths[i][j] = path[::-1]
+    dist[~np.isfinite(dist)] = 0.0
+    np.fill_diagonal(dist, 0.0)
+    return dist.astype(np.float64), paths
+
+
+class UnreachableError(ValueError):
+    """Transfer requested between machines with no route at all."""
+
+
+@dataclasses.dataclass
+class _Flow:
+    src: int
+    dst: int
+    remaining: float                 # bytes left
+    cap: float                       # end-to-end rate ceiling (bytes/s)
+    links: tuple[tuple[int, int], ...]
+    done_cb: Callable[[], None]
+    rate: float = 0.0
+    last_update: float = 0.0
+    finish_ev: Optional[Event] = None
+
+
+class NetworkModel:
+    def __init__(self, graph: ClusterGraph, comm_model: str = "alphabeta",
+                 capacity_scale: Optional[Callable[[int, float], float]] = None):
+        if comm_model not in ("alphabeta", "paper"):
+            raise ValueError(f"unknown comm model {comm_model!r}")
+        self.graph = graph
+        self.comm_model = comm_model
+        self.capacity_scale = capacity_scale
+        self.routed_ms, self.paths = _paths(graph.latency)
+        n = graph.n
+        # Per-link capacity from the *direct* latency; end-to-end ceiling from
+        # the *routed* latency (see module docstring for why this calibrates).
+        self.link_bw = np.zeros((n, n))
+        self.e2e_bw = np.zeros((n, n))
+        for bw, lat_ms in ((self.link_bw, graph.latency),
+                           (self.e2e_bw, self.routed_ms)):
+            for i in range(n):
+                for j in range(n):
+                    lat = float(lat_ms[i, j])
+                    if i != j and lat > 0:
+                        bw[i, j] = cm.link_bandwidth(lat, comm_model)
+        self._active: list[_Flow] = []
+        self._tick_ev: Optional[Event] = None
+        self.bytes_moved: float = 0.0
+
+    # -- static queries ------------------------------------------------------
+    def latency_s(self, i: int, j: int) -> float:
+        """One-time propagation delay of a transfer (0 under the paper model,
+        whose latency table already is a per-byte cost)."""
+        if self.comm_model == "paper":
+            return 0.0
+        return float(self.routed_ms[i, j]) * MS
+
+    def reachable(self, i: int, j: int) -> bool:
+        return i == j or bool(self.paths[i][j])
+
+    # -- flow API ------------------------------------------------------------
+    def transfer(self, sim: Simulator, i: int, j: int, nbytes: float,
+                 done_cb: Callable[[], None]) -> None:
+        """Move ``nbytes`` from i to j; ``done_cb`` fires at completion."""
+        if i == j or nbytes <= 0:
+            sim.schedule(0.0, done_cb)
+            return
+        if not self.paths[i][j]:
+            raise UnreachableError(f"no route between machines {i} and {j}")
+        self.bytes_moved += float(nbytes)
+        path = self.paths[i][j]
+        # Links are full-duplex: each direction is its own resource, so the
+        # two opposing hops of a 2-node all-reduce ring don't contend — which
+        # keeps the zero-contention limit equal to the analytic model.
+        links = tuple((a, b) for a, b in zip(path[:-1], path[1:]))
+        flow = _Flow(src=i, dst=j, remaining=float(nbytes),
+                     cap=float(self.e2e_bw[i, j]), links=links, done_cb=done_cb)
+        # latency phase first; the flow holds no link capacity while in flight
+        sim.schedule(self.latency_s(i, j), self._start_flow, sim, flow)
+
+    def _start_flow(self, sim: Simulator, flow: _Flow) -> None:
+        flow.last_update = sim.now
+        self._active.append(flow)
+        self._rebalance(sim)
+        if self.capacity_scale is not None and self._tick_ev is None:
+            self._tick_ev = sim.schedule(TICK_S, self._tick, sim)
+
+    def _tick(self, sim: Simulator) -> None:
+        self._tick_ev = None
+        if self._active:
+            self._rebalance(sim)
+            self._tick_ev = sim.schedule(TICK_S, self._tick, sim)
+
+    def _scale(self, node: int, t: float) -> float:
+        if self.capacity_scale is None:
+            return 1.0
+        return max(0.05, float(self.capacity_scale(node, t)))
+
+    def _rebalance(self, sim: Simulator) -> None:
+        """Re-derive every active flow's fair-share rate and reschedule its
+        completion. O(flows x path length) per call."""
+        now = sim.now
+        # 1. bank progress at the old rates; retire flows that just drained
+        #    BEFORE computing shares, so they stop occupying their links
+        finished: list[_Flow] = []
+        for f in self._active:
+            f.remaining = max(0.0, f.remaining - f.rate * (now - f.last_update))
+            f.last_update = now
+            if f.remaining <= 1e-9:
+                finished.append(f)
+        for f in finished:
+            if f.finish_ev is not None:
+                f.finish_ev.cancel()
+                f.finish_ev = None
+            self._active.remove(f)
+        # 2. count surviving flows per link
+        n_on: dict[tuple[int, int], int] = {}
+        for f in self._active:
+            for l in f.links:
+                n_on[l] = n_on.get(l, 0) + 1
+        # 3. new rates + completion events
+        for f in self._active:
+            rate = f.cap * min(self._scale(f.src, now), self._scale(f.dst, now))
+            for (a, b) in f.links:
+                share = (self.link_bw[a, b]
+                         * min(self._scale(a, now), self._scale(b, now))
+                         / n_on[(a, b)])
+                rate = min(rate, share)
+            f.rate = max(rate, 1.0)  # floor avoids div-by-zero stalls
+            if f.finish_ev is not None:
+                f.finish_ev.cancel()
+            f.finish_ev = sim.schedule(f.remaining / f.rate,
+                                       self._finish_flow, sim, f)
+        # completion callbacks only schedule new events, never mutate
+        # self._active synchronously, so firing them last is safe
+        for f in finished:
+            self._complete(sim, f)
+
+    def _finish_flow(self, sim: Simulator, flow: _Flow) -> None:
+        flow.remaining = 0.0
+        self._rebalance(sim)  # retires `flow` and re-rates the survivors
+
+    def _complete(self, sim: Simulator, flow: _Flow) -> None:
+        if flow in self._active:
+            self._active.remove(flow)
+        flow.done_cb()
+
+    # -- lifecycle -----------------------------------------------------------
+    def reset(self) -> None:
+        """Drop all in-flight flows (used when a re-plan bumps the epoch; the
+        flows' pending events die with the old epoch)."""
+        for f in self._active:
+            if f.finish_ev is not None:
+                f.finish_ev.cancel()
+        self._active.clear()
+        self._tick_ev = None

@@ -1,0 +1,173 @@
+"""Named stress scenarios for the geo-fleet simulator.
+
+A scenario bundles a fleet builder, the task set, the comm model, jitter /
+straggler settings, a fault schedule (fractions of the estimated run length)
+and an optional time-varying traffic profile. Register new ones with
+``register`` (see README "Adding a scenario"):
+
+    from repro.sim import scenarios as sc
+    sc.register(sc.Scenario(name="my_case", description="...",
+                            fleet=my_fleet_builder, tasks=sc.SIM_TASKS))
+
+All randomness is derived from the run seed, so every scenario replays
+bit-identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.graph import (GPU_CATALOG, ClusterGraph, Machine, _COORDS,
+                              _latency_matrix, paper_fig1_graph, random_fleet)
+from repro.sim.compute import JitterConfig
+
+# Scenario task set: one model big enough that its group must span several
+# machines (30B params => ~480 GB of optimizer state, more than any single
+# machine except an 8xA100 node) riding with a small task, at a reduced
+# global batch so a simulated step is seconds-to-minutes. Multi-machine
+# groups are what make contention, stragglers and faults bite.
+SIM_TASKS: tuple[cm.ModelTask, ...] = (
+    cm.ModelTask("GPT-30B", 30e9, 48, 7168, batch_tokens=65_536,
+                 microbatches=4),
+    dataclasses.replace(cm.GPT2_1_5B, batch_tokens=65_536, microbatches=4),
+)
+
+# traffic profile: (graph, horizon_s) -> scale(node_id, t) in (0, 1]
+TrafficBuilder = Callable[[ClusterGraph, float], Callable[[int, float], float]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    fleet: Callable[[int], ClusterGraph]
+    tasks: tuple[cm.ModelTask, ...] = SIM_TASKS
+    comm_model: str = "alphabeta"
+    jitter: JitterConfig = JitterConfig()
+    fault_fracs: tuple[float, ...] = ()   # fault times / estimated run length
+    kills_per_fault: int = 1
+    traffic: Optional[TrafficBuilder] = None
+    steps: int = 3
+
+
+SCENARIOS: dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    if scenario.name in SCENARIOS:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"known: {sorted(SCENARIOS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Fleet builders
+# ---------------------------------------------------------------------------
+def lan_fleet(seed: int = 0, n: int = 8) -> ClusterGraph:
+    """One region, fast links: contention and heterogeneity without the WAN."""
+    rng = np.random.default_rng(seed)
+    gpus = list(GPU_CATALOG)
+    machines = [Machine("California", gpus[int(rng.integers(0, len(gpus)))], 8)
+                for _ in range(n)]
+    return ClusterGraph(machines, _latency_matrix(machines, rng))
+
+
+def blocked_fleet(seed: int = 0) -> ClusterGraph:
+    """Fleet containing the paper's policy-blocked Beijing<->Paris pair plus
+    extra blocked links, so cross-block traffic must relay through the London
+    hub (exercising ``routed_latency`` paths and relay-hub contention)."""
+    rng = np.random.default_rng(seed)
+    machines = [
+        Machine("Beijing", "RTX3090", 8),
+        Machine("Nanjing", "A5000", 8),
+        Machine("Paris", "A100", 8),
+        Machine("Berlin", "A40", 8),
+        Machine("London", "V100", 8),
+        Machine("California", "A100", 8),
+        Machine("Tokyo", "V100", 8),
+        Machine("Rome", "RTX3090", 8),
+    ]
+    lat = _latency_matrix(machines, rng)
+    # Beijing/Nanjing may only reach Europe via London (ids: 0/1 -> 2/3/7).
+    for cn in (0, 1):
+        for eu in (2, 3, 7):
+            lat[cn, eu] = lat[eu, cn] = 0.0
+    return ClusterGraph(machines, lat)
+
+
+# ---------------------------------------------------------------------------
+# Traffic profiles
+# ---------------------------------------------------------------------------
+def diurnal_traffic(depth: float = 0.6) -> TrafficBuilder:
+    """Sinusoidal background load phased by region longitude (local time of
+    day): at a node's peak hour only ``1 - depth`` of link capacity is left
+    for training traffic. The period equals the estimated run length so a run
+    sweeps a full day."""
+    def build(graph: ClusterGraph, horizon_s: float):
+        period = max(horizon_s, 1.0)
+        phase = np.array([_COORDS[m.region][1] / 360.0
+                          for m in graph.machines])
+
+        def scale(node: int, t: float) -> float:
+            load = 0.5 + 0.5 * np.sin(2 * np.pi * (t / period + phase[node]))
+            return float(1.0 - depth * load)
+        return scale
+    return build
+
+
+# ---------------------------------------------------------------------------
+# The registry
+# ---------------------------------------------------------------------------
+register(Scenario(
+    name="single_region_lan",
+    description="8 heterogeneous machines on a 1 ms LAN — the contention-free "
+                "baseline; placement quality is dominated by compute.",
+    fleet=lan_fleet))
+
+register(Scenario(
+    name="cross_region_wan",
+    description="The paper's Fig. 1 eight-region fleet under the alpha-beta "
+                "WAN model.",
+    fleet=paper_fig1_graph))
+
+register(Scenario(
+    name="diurnal_traffic",
+    description="Cross-region fleet where background traffic follows local "
+                "time of day, squeezing link capacity by up to 60%.",
+    fleet=paper_fig1_graph,
+    traffic=diurnal_traffic()))
+
+register(Scenario(
+    name="straggler_heavy",
+    description="10-machine fleet with 25% persistent 3x stragglers and "
+                "heavy per-op jitter (sigma=0.3).",
+    fleet=lambda seed: random_fleet(10, seed=seed),
+    jitter=JitterConfig(sigma=0.3, straggler_frac=0.25,
+                        straggler_slowdown=3.0)))
+
+register(Scenario(
+    name="preemption_storm",
+    description="12-machine fleet losing two machines at 30%/55%/80% of the "
+                "run — every loss triggers an elastic re-plan and a restart "
+                "of the in-flight step.",
+    fleet=lambda seed: random_fleet(12, seed=seed),
+    fault_fracs=(0.30, 0.55, 0.80),
+    kills_per_fault=2,
+    steps=2))
+
+register(Scenario(
+    name="blocked_links",
+    description="Policy-blocked links force China<->Europe traffic to relay "
+                "through London; the relay hub becomes a contended resource.",
+    fleet=blocked_fleet))

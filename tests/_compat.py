@@ -1,0 +1,45 @@
+"""Graceful fallback when ``hypothesis`` is not installed.
+
+Declared as a dev dependency (pyproject.toml / requirements-dev.txt), but the
+container images don't always carry it. When it's missing, ``given`` degrades
+to a deterministic ``pytest.mark.parametrize`` sweep over evenly spaced
+samples of the strategy's range, so the property tests still run — just with
+fixed examples instead of search. Only the single-argument
+``@given(name=st.floats(...)/st.integers(...))`` form used in this repo is
+supported by the fallback.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value: float, max_value: float, n: int = 7) -> list:
+            return [float(x) for x in np.linspace(min_value, max_value, n)]
+
+        @staticmethod
+        def integers(min_value: int, max_value: int, n: int = 7) -> list:
+            return sorted({int(x) for x in
+                           np.linspace(min_value, max_value, n)})
+
+    st = _Strategies()
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(**kw):
+        if len(kw) != 1:
+            raise NotImplementedError(
+                "fallback @given supports exactly one argument")
+        (name, values), = kw.items()
+        return pytest.mark.parametrize(name, values)
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

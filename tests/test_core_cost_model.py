@@ -1,6 +1,6 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core import cost_model as cm
 from repro.core.graph import paper_fig1_graph, random_fleet

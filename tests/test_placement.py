@@ -1,0 +1,116 @@
+"""core.placement (pod bridge) and cost_model.routed_latency coverage."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import placement
+from repro.core.graph import ClusterGraph, Machine
+
+
+# ---------------------------------------------------------------------------
+# routed_latency
+# ---------------------------------------------------------------------------
+def test_routed_latency_relays_blocked_pair():
+    # 0 -- 1 -- 2 chain; 0<->2 policy-blocked: traffic relays via 1
+    lat = np.array([[0.0, 10.0, 0.0],
+                    [10.0, 0.0, 15.0],
+                    [0.0, 15.0, 0.0]], np.float32)
+    routed = cm.routed_latency(lat)
+    assert routed[0, 2] == pytest.approx(25.0)
+    assert routed[2, 0] == pytest.approx(25.0)
+    # direct links keep their latency (no shorter relay exists)
+    assert routed[0, 1] == pytest.approx(10.0)
+
+
+def test_routed_latency_prefers_cheaper_relay():
+    # direct 0->2 exists but the relay through 1 is cheaper
+    lat = np.array([[0.0, 5.0, 100.0],
+                    [5.0, 0.0, 5.0],
+                    [100.0, 5.0, 0.0]], np.float32)
+    routed = cm.routed_latency(lat)
+    assert routed[0, 2] == pytest.approx(10.0)
+
+
+def test_routed_latency_disconnected_pair_stays_blocked():
+    # node 2 has no links at all: the pair stays 0 ("cannot communicate")
+    lat = np.array([[0.0, 10.0, 0.0],
+                    [10.0, 0.0, 0.0],
+                    [0.0, 0.0, 0.0]], np.float32)
+    routed = cm.routed_latency(lat)
+    assert routed[0, 2] == 0.0
+    assert routed[1, 2] == 0.0
+    assert routed[0, 1] == pytest.approx(10.0)
+    assert np.all(np.diag(routed) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# choose_pod_strategy
+# ---------------------------------------------------------------------------
+def test_single_pod_is_dp_with_no_cross_pod_traffic():
+    for task in (cm.OPT_175B, cm.BERT_LARGE):
+        strat, nbytes = placement.choose_pod_strategy(task, n_pods=1)
+        assert strat == "dp"
+        assert nbytes == 0.0
+    strat, nbytes = placement.choose_pod_strategy(cm.BERT_LARGE, n_pods=0)
+    assert (strat, nbytes) == ("dp", 0.0)
+
+
+def test_small_model_prefers_dp_large_model_prefers_pipeline():
+    # BERT: 0.68 GB of weights vs GBs of activations -> DP sync is cheaper
+    strat, nbytes = placement.choose_pod_strategy(cm.BERT_LARGE, n_pods=4)
+    assert strat == "dp"
+    assert nbytes == pytest.approx(2 * cm.BERT_LARGE.param_bytes * 3 / 4)
+    # OPT-175B: 350 GB of weights dwarf the activations -> pipeline wins
+    strat, nbytes = placement.choose_pod_strategy(cm.OPT_175B, n_pods=4)
+    assert strat == "pipeline"
+    assert nbytes == pytest.approx(
+        2 * cm.OPT_175B.microbatches * cm.OPT_175B.act_bytes_per_microbatch * 3)
+
+
+def test_dp_pipeline_crossover_point():
+    """Scaling params at fixed activation size flips DP -> pipeline exactly
+    where ring-all-reduce bytes overtake boundary-activation bytes."""
+    base = cm.ModelTask("x", 1e9, 24, 1024, batch_tokens=65_536,
+                        microbatches=8)
+    n = 4
+    pp_bytes = 2 * base.microbatches * base.act_bytes_per_microbatch * (n - 1)
+    # params such that dp_bytes == pp_bytes (dp wins ties)
+    crossover_params = pp_bytes * n / (n - 1) / 2 / base.dtype_bytes
+    at = dataclasses.replace(base, params=crossover_params)
+    above = dataclasses.replace(base, params=crossover_params * 1.01)
+    assert placement.choose_pod_strategy(at, n)[0] == "dp"
+    assert placement.choose_pod_strategy(above, n)[0] == "pipeline"
+
+
+# ---------------------------------------------------------------------------
+# pods_as_graph after the Machine capability-override refactor
+# ---------------------------------------------------------------------------
+def test_pods_as_graph_carries_pod_capabilities():
+    pods = [placement.PodSpec("pod0", "California", chips=256),
+            placement.PodSpec("pod1", "Tokyo", chips=128,
+                              tflops_per_chip=459.0, hbm_gb_per_chip=32.0)]
+    lat = np.array([[0.0, 118.8], [118.8, 0.0]], np.float32)
+    g = placement.pods_as_graph(pods, lat)
+    np.testing.assert_allclose(g.memory_gb(), [16.0 * 256, 32.0 * 128])
+    np.testing.assert_allclose(g.tflops(), [197.0 * 256, 459.0 * 128])
+    # no monkey-patched bound methods: the dataclass carries the truth
+    assert "memory_gb" not in vars(g) and "tflops" not in vars(g)
+    # features see the pod values too (memory is no longer the placeholder's)
+    feats = g.node_features()
+    assert feats[0, -1] == pytest.approx(16.0 * 256 / 512.0)
+    assert 0.0 < feats[0, -2] <= 1.0  # capability clamped into feature range
+
+
+def test_machine_from_caps_and_catalog_agree():
+    cat = Machine("Tokyo", "A100", 8)
+    custom = Machine.from_caps("Tokyo", capability=cat.capability,
+                               memory_gb=cat.memory_gb, tflops=cat.tflops)
+    assert custom.memory_gb == cat.memory_gb
+    assert custom.tflops == cat.tflops
+    assert custom.capability == cat.capability
+    g = ClusterGraph([cat, custom],
+                     np.array([[0.0, 1.0], [1.0, 0.0]], np.float32))
+    np.testing.assert_allclose(g.memory_gb()[0], g.memory_gb()[1])
+    np.testing.assert_allclose(g.tflops()[0], g.tflops()[1])

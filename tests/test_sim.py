@@ -1,0 +1,262 @@
+"""repro.sim: calibration against core.cost_model, fair-share contention,
+stragglers, determinism, fault-driven re-planning, scenario registry."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core.graph import ClusterGraph, Machine, paper_fig1_graph, random_fleet
+from repro.sim import (ComputeModel, JitterConfig, NetworkModel, SCENARIOS,
+                       Simulator, evaluate_scenario, get_scenario,
+                       simulate_single)
+from repro.sim.evaluate import (FleetSimulation, FullFleetPlacer, HulkPlacer,
+                                trained_gnn)
+from repro.sim.scenarios import SIM_TASKS, blocked_fleet, diurnal_traffic
+
+TASK = cm.GPT2_1_5B
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+def test_engine_fifo_at_equal_times_and_cancel():
+    sim = Simulator()
+    fired = []
+    sim.schedule(1.0, fired.append, "a")
+    sim.schedule(1.0, fired.append, "b")
+    ev = sim.schedule(0.5, fired.append, "x")
+    ev.cancel()
+    sim.run()
+    assert fired == ["a", "b"]
+    assert sim.now == 1.0
+
+
+def test_engine_epoch_guard_drops_stale_events():
+    sim = Simulator()
+    fired = []
+    sim.schedule(1.0, fired.append, "stale")
+    sim.schedule(2.0, fired.append, "survivor", pin_epoch=False)
+    sim.schedule(0.5, sim.bump_epoch)
+    sim.run()
+    assert fired == ["survivor"]
+
+
+# ---------------------------------------------------------------------------
+# Network: zero-contention limits == cost_model comm models (acceptance)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("comm_model", ["alphabeta", "paper"])
+def test_single_flow_matches_cost_model(comm_model):
+    g = paper_fig1_graph()
+    comm = cm.make_comm(g, comm_model)
+    net = NetworkModel(g, comm_model)
+    sim = Simulator()
+    done = []
+    nbytes = 1e9
+    net.transfer(sim, 0, 3, nbytes, lambda: done.append(sim.now))
+    sim.run()
+    assert done and done[0] == pytest.approx(comm.time_s(0, 3, nbytes),
+                                             rel=1e-6)
+
+
+def test_single_flow_matches_alphabeta_on_relayed_pair():
+    """A policy-blocked pair relays through routed_latency's path and still
+    reproduces AlphaBetaComm (which uses the routed latency) exactly."""
+    g = blocked_fleet(seed=0)
+    assert g.latency[0, 2] == 0.0  # Beijing <-> Paris blocked
+    comm = cm.AlphaBetaComm(g.latency)
+    net = NetworkModel(g, "alphabeta")
+    sim = Simulator()
+    done = []
+    net.transfer(sim, 0, 2, 5e8, lambda: done.append(sim.now))
+    sim.run()
+    expected = comm.time_s(0, 2, 5e8)
+    assert math.isfinite(expected)
+    assert done and done[0] == pytest.approx(expected, rel=1e-6)
+
+
+def test_fair_share_contention_slows_and_is_fair():
+    g = paper_fig1_graph()
+    nbytes = 1e9
+
+    def run(n_flows):
+        net = NetworkModel(g, "alphabeta")
+        sim = Simulator()
+        finishes = []
+        for _ in range(n_flows):
+            net.transfer(sim, 0, 3, nbytes, lambda: finishes.append(sim.now))
+        sim.run()
+        return finishes
+
+    solo = run(1)[0]
+    pair = run(2)
+    assert len(pair) == 2
+    # equal flows on one link finish together, ~2x slower than solo
+    assert pair[0] == pytest.approx(pair[1], rel=1e-6)
+    assert pair[0] > 1.8 * solo
+
+
+def test_relay_hub_contention():
+    """Flows relaying through a shared hub leg contend even though their
+    endpoints differ."""
+    machines = [Machine("Beijing", "A100", 8), Machine("Nanjing", "A100", 8),
+                Machine("London", "A100", 8), Machine("Paris", "A100", 8)]
+    lat = np.zeros((4, 4), np.float32)
+    # only the star around London (id 2) exists
+    for i in (0, 1, 3):
+        lat[i, 2] = lat[2, i] = 100.0
+    g = ClusterGraph(machines, lat)
+    nbytes = 1e9
+
+    def run(flows):
+        net = NetworkModel(g, "alphabeta")
+        sim = Simulator()
+        out = {}
+        for k, (a, b) in enumerate(flows):
+            net.transfer(sim, a, b, nbytes,
+                         (lambda kk: lambda: out.setdefault(kk, sim.now))(k))
+        sim.run()
+        return out
+
+    solo = run([(0, 3)])[0]                   # Beijing -> Paris via London
+    # two relayed flows fit inside the hub leg's headroom (fair share of the
+    # 1 GB/s leg still exceeds the 0.3 GB/s end-to-end cap) ...
+    both = run([(0, 3), (1, 3)])
+    assert both[0] == pytest.approx(solo, rel=1e-6)
+    # ... but four flows exceed it and the shared London->Paris leg throttles
+    four = run([(0, 3), (1, 3), (0, 3), (1, 3)])
+    assert max(four.values()) > 1.1 * solo
+
+
+# ---------------------------------------------------------------------------
+# Calibration: simulated step == analytic step in the clean limit (acceptance)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("comm_model", ["alphabeta", "paper"])
+@pytest.mark.parametrize("strategy", ["gpipe", "dp", "tp"])
+def test_step_time_matches_cost_model(comm_model, strategy):
+    g = paper_fig1_graph()
+    ids = list(range(g.n))
+    comm = cm.make_comm(g, comm_model)
+    c, p = cm.group_step_time(g, ids, TASK, comm, strategy)
+    res = simulate_single(g, ids, TASK, strategy, comm_model=comm_model,
+                          steps=2)
+    sim_t = res.mean_step_s(TASK.name)
+    assert abs(sim_t - (c + p)) / (c + p) < 0.05  # acceptance bound; ~exact
+    assert res.per_task[TASK.name]["failed"] is False
+
+
+def test_single_machine_group_no_comm():
+    g = paper_fig1_graph()
+    res = simulate_single(g, [1], TASK, "gpipe", steps=1)
+    assert res.comm_s == 0.0
+    comm = cm.make_comm(g, "alphabeta")
+    c, p = cm.gpipe_time(g, [1], TASK, comm)
+    assert res.makespan == pytest.approx(p, rel=1e-6)
+
+
+def test_infeasible_placement_marked_failed():
+    g = paper_fig1_graph()
+    res = simulate_single(g, [6], cm.OPT_175B, "gpipe", steps=1)
+    assert res.per_task["OPT-175B"]["failed"] is True
+    assert math.isinf(res.makespan)
+
+
+# ---------------------------------------------------------------------------
+# Stragglers and jitter
+# ---------------------------------------------------------------------------
+def test_stragglers_slow_the_step_deterministically():
+    g = random_fleet(8, seed=1)
+    ids = list(range(8))
+    clean = simulate_single(g, ids, TASK, "gpipe", steps=2)
+    jit = JitterConfig(sigma=0.2, straggler_frac=0.25, straggler_slowdown=3.0)
+    slow1 = simulate_single(g, ids, TASK, "gpipe", steps=2, jitter=jit, seed=3)
+    slow2 = simulate_single(g, ids, TASK, "gpipe", steps=2, jitter=jit, seed=3)
+    assert slow1.makespan > clean.makespan
+    assert slow1.makespan == slow2.makespan            # replay-exact
+    assert slow1.stragglers and all(0 <= i < 8 for i in slow1.stragglers)
+
+
+def test_diurnal_traffic_squeezes_links():
+    g = paper_fig1_graph()
+    ids = list(range(g.n))
+    placer_clean = FullFleetPlacer("gpipe", [TASK], "B")
+    clean = FleetSimulation(g, [TASK], placer_clean, steps=2,
+                            concurrent=False).run()
+    placer_tr = FullFleetPlacer("gpipe", [TASK], "B")
+    squeezed = FleetSimulation(g, [TASK], placer_tr, steps=2,
+                               traffic=diurnal_traffic(depth=0.6),
+                               concurrent=False).run()
+    assert squeezed.makespan > clean.makespan
+
+
+# ---------------------------------------------------------------------------
+# Faults -> elastic re-plan
+# ---------------------------------------------------------------------------
+def test_fault_triggers_replan_and_run_completes():
+    g = random_fleet(12, seed=2)
+    placer = FullFleetPlacer("gpipe", [TASK], "B")
+    res = FleetSimulation(g, [TASK], placer, steps=3, fault_fracs=(0.4,),
+                          kills_per_fault=2, seed=5, concurrent=False).run()
+    assert len(res.replans) == 1
+    assert len(res.replans[0]["killed"]) == 2
+    assert math.isfinite(res.makespan)
+    assert res.per_task[TASK.name]["failed"] is False
+    assert placer.graph.n == 10  # machines really left the fleet
+
+
+@pytest.fixture(scope="module")
+def gnn():
+    return trained_gnn(list(SIM_TASKS), seed=0)
+
+
+def test_hulk_placer_elastic_replan(gnn):
+    params, cfg = gnn
+    tasks = list(SIM_TASKS)
+    g = random_fleet(12, seed=0)
+    placer = HulkPlacer(tasks, params, cfg)
+    res = FleetSimulation(g, tasks, placer, steps=2, fault_fracs=(0.5,),
+                          kills_per_fault=2, seed=1, concurrent=True).run()
+    assert len(res.replans) == 1
+    assert placer.rt.state.epoch >= 1          # ElasticRuntime really re-planned
+    assert math.isfinite(res.makespan)
+    groups = placer.rt.assignment.groups
+    placed = {i for ids in groups.values() for i in ids}
+    assert all(0 <= i < placer.rt.graph.n for i in placed)
+
+
+# ---------------------------------------------------------------------------
+# Scenario registry + evaluation
+# ---------------------------------------------------------------------------
+def test_registry_has_required_scenarios():
+    required = {"single_region_lan", "cross_region_wan", "diurnal_traffic",
+                "straggler_heavy", "preemption_storm", "blocked_links"}
+    assert required <= set(SCENARIOS)
+    assert len(SCENARIOS) >= 6
+    with pytest.raises(KeyError):
+        get_scenario("no_such_scenario")
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_every_scenario_runs_deterministically(name):
+    scn = get_scenario(name)
+    def run():
+        g = scn.fleet(0)
+        placer = FullFleetPlacer("gpipe", list(scn.tasks), "B")
+        return FleetSimulation(
+            g, list(scn.tasks), placer, comm_model=scn.comm_model,
+            jitter=scn.jitter, traffic=scn.traffic,
+            fault_fracs=scn.fault_fracs,
+            kills_per_fault=scn.kills_per_fault, steps=scn.steps,
+            seed=0, concurrent=False).run()
+    a, b = run(), run()
+    assert math.isfinite(a.makespan)
+    assert a.makespan == b.makespan
+    assert a.n_events == b.n_events
+
+
+def test_evaluate_scenario_scores_all_systems(gnn):
+    row = evaluate_scenario(get_scenario("cross_region_wan"), seed=0)
+    for system in ("Hulk", "SystemA", "SystemB", "SystemC"):
+        assert "makespan_s" in row[system]
+    assert math.isfinite(row["Hulk"]["makespan_s"])
+    assert "improvement_vs_best_baseline" in row
