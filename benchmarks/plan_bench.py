@@ -1,0 +1,277 @@
+"""Fleet-scale planner benchmark: the fast planning path, before vs after.
+
+Measures end-to-end planner latency — GNN training + Algorithm 1
+(``task_assignments``) + disaster recovery — at fleet sizes
+n in {24, 64, 128, 256, 512}, plus GNN training throughput (graphs/s) and
+oracle-labeler throughput.
+
+"before" is the pre-fast-path execution kept in-tree exactly for this
+comparison: ``train_gnn(mode="sequential")`` (jitted step per graph per
+epoch, host sync after every step, arrays re-uploaded per call) and the
+eager unjitted per-subgraph ``predict``. "after" is the fast planning path:
+``train_gnn(mode="joint")`` (same-bucket graphs stacked into (G, n, ·)
+arrays, masked loss vmapped across graphs, one Adam step per epoch on the
+mean loss, the whole run one buffer-donating ``lax.scan``) and the
+size-bucketed jit-cached inference. ``after_scan`` is the same-trajectory
+variant (per-graph updates inside the scan — "before"'s params within float
+tolerance, still bucketed inference). Both paths are warmed once so numbers
+compare
+steady-state planning latency with compile caches hot, not XLA compile time.
+Training quality is recorded (final accuracy, placement makespan, deferred
+tasks) so the speedup cannot silently come from a worse planner.
+
+``python -m benchmarks.plan_bench`` writes benchmarks/BENCH_plan.json:
+
+    {"artifact": "plan_bench",
+     "machine": {"platform": ..., "backend": ..., "jax": ...},
+     "config": {"train_graphs": G, "train_nodes": n, "steps": S, ...},
+     "planner": {"256": {"before": {"train_s": .., "assign_s": ..,
+                                    "recover_s": .., "total_s": ..,
+                                    "accuracy": .., "makespan_s": ..,
+                                    "deferred": [..]},
+                         "after": {...}, "after_scan": {...},
+                         "speedup_train_assign": ..}, ...},
+     "training_throughput": {"graphs_per_s_before": ..,
+                             "graphs_per_s_after": .., "speedup": ..},
+     "labeler": {"n_nodes": .., "reference_s": .., "vectorized_s": ..,
+                 "speedup": .., "identical": true}}
+
+``--smoke`` runs tiny sizes and asserts the emitted JSON is valid (the CI
+job that keeps this harness from rotting).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import platform
+import sys
+import time
+
+
+def _sys_path():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+SIZES = (24, 64, 128, 256, 512)
+SMOKE_SIZES = (16, 24)
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_plan.json")
+SMOKE_OUT = os.path.join(os.path.dirname(__file__), "BENCH_plan.smoke.json")
+
+
+def _planner_once(fleet, tasks, cfg, dataset, steps, train_mode, bucketed):
+    """One full planner run; returns timings + quality of the placement."""
+    from repro.core import assign as assign_mod
+    from repro.core import cost_model as cm
+    from repro.core import train as gnn_train
+
+    prev = gnn_train.FLAGS["bucketed_predict"]
+    gnn_train.FLAGS["bucketed_predict"] = bucketed
+    try:
+        t0 = time.perf_counter()
+        params, hist = gnn_train.train_gnn(cfg, dataset, steps=steps, lr=0.01,
+                                           mode=train_mode)
+        t_train = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        a = assign_mod.task_assignments(fleet, tasks, params, cfg)
+        t_assign = time.perf_counter() - t0
+
+        # disaster recovery: fail two machines of the biggest group
+        big = max(a.groups.values(), key=len) if a.groups else []
+        failed = big[:2] if len(big) > 2 else []
+        t0 = time.perf_counter()
+        if failed:
+            assign_mod.recover(fleet, a, failed, tasks, params, cfg)
+        t_recover = time.perf_counter() - t0
+
+        comm = cm.make_comm(fleet, "alphabeta")
+        makespan = cm.placement_makespan(fleet, a.groups, tasks,
+                                         comm)["makespan"]
+        return {"train_s": t_train, "assign_s": t_assign,
+                "recover_s": t_recover, "total_s": t_train + t_assign,
+                "accuracy": hist[-1]["accuracy"],
+                "makespan_s": float(makespan), "deferred": a.deferred}
+    finally:
+        gnn_train.FLAGS["bucketed_predict"] = prev
+
+
+_MODES = {
+    "before": ("sequential", False),
+    "after": ("joint", True),
+    "after_scan": ("scan", True),
+}
+
+
+def _tasks(task_set: str):
+    from repro.core import cost_model as cm
+    # "three" drops OPT-175B (needs 2.8 TB) so tiny smoke fleets stay feasible
+    return cm.FOUR_TASKS if task_set == "four" else cm.FOUR_TASKS[1:]
+
+
+def _feasible_fleet(n: int, tasks):
+    """First seeded fleet of size n that meets the tasks' memory floor."""
+    from repro.core import assign as assign_mod
+    from repro.core.graph import random_fleet
+
+    for s in range(50):
+        fleet = random_fleet(n, seed=100 + n + s)
+        if assign_mod.check_capacity(fleet, tasks):
+            return fleet
+    raise RuntimeError(f"no feasible fleet of size {n} found")
+
+
+def planner_latency(sizes=SIZES, train_graphs=64, train_nodes=16,
+                    steps=15, task_set="four") -> dict:
+    from repro.core import train as gnn_train
+
+    tasks = _tasks(task_set)
+    cfg = gnn_train.gnn_config_for(tasks)
+    dataset = gnn_train.make_dataset(train_graphs, tasks, n_nodes=train_nodes,
+                                     seed=3, label_frac=0.8)
+    out = {}
+    for n in sizes:
+        fleet = _feasible_fleet(n, tasks)
+        row = {}
+        for name, (mode, bucketed) in _MODES.items():
+            _planner_once(fleet, tasks, cfg, dataset, steps, mode, bucketed)
+            row[name] = _planner_once(fleet, tasks, cfg, dataset, steps,
+                                      mode, bucketed)
+        row["speedup_train_assign"] = (row["before"]["total_s"]
+                                       / row["after"]["total_s"])
+        out[str(n)] = row
+    return out
+
+
+def training_throughput(train_graphs=64, train_nodes=16, steps=15,
+                        task_set="four") -> dict:
+    from repro.core import train as gnn_train
+
+    tasks = _tasks(task_set)
+    cfg = gnn_train.gnn_config_for(tasks)
+    ds = gnn_train.make_dataset(train_graphs, tasks, n_nodes=train_nodes,
+                                seed=7, label_frac=0.8)
+    res = {"graphs": train_graphs, "steps": steps, "n_nodes": train_nodes}
+    for name, mode in (("before", "sequential"), ("after", "joint")):
+        gnn_train.train_gnn(cfg, ds, steps=steps, lr=0.01, mode=mode)  # warm
+        t0 = time.perf_counter()
+        gnn_train.train_gnn(cfg, ds, steps=steps, lr=0.01, mode=mode)
+        dt = time.perf_counter() - t0
+        res[f"graphs_per_s_{name}"] = train_graphs * steps / dt
+    res["speedup"] = res["graphs_per_s_after"] / res["graphs_per_s_before"]
+    return res
+
+
+def labeler_throughput(n_nodes=64, iters=150) -> dict:
+    import numpy as np
+    from repro.core import cost_model as cm
+    from repro.core import labels as labels_mod
+    from repro.core.graph import random_fleet
+
+    g = random_fleet(n_nodes, seed=9)
+    comm = cm.make_comm(g)
+    tasks = cm.FOUR_TASKS
+    t0 = time.perf_counter()
+    ref = labels_mod.local_search_reference(
+        g, labels_mod.greedy_partition_reference(g, tasks, comm, 0),
+        tasks, comm, iters, 0)
+    t_ref = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fast = labels_mod.local_search(
+        g, labels_mod.greedy_partition(g, tasks, comm, 0),
+        tasks, comm, iters, 0)
+    t_fast = time.perf_counter() - t0
+    return {"n_nodes": n_nodes, "local_search_iters": iters,
+            "reference_s": t_ref, "vectorized_s": t_fast,
+            "speedup": t_ref / t_fast,
+            "identical": bool(np.array_equal(ref, fast))}
+
+
+def run_plan_bench(sizes=SIZES, train_graphs=64, train_nodes=16, steps=15,
+                   out_path=OUT, task_set="four") -> dict:
+    import jax
+
+    res = {
+        "artifact": "plan_bench",
+        "machine": {"platform": platform.platform(),
+                    "processor": platform.processor() or "unknown",
+                    "backend": jax.default_backend(),
+                    "jax": jax.__version__},
+        "config": {"train_graphs": train_graphs, "train_nodes": train_nodes,
+                   "steps": steps, "task_set": task_set,
+                   "timing": "steady-state (warmed once, compile caches hot)"},
+        "planner": planner_latency(sizes, train_graphs, train_nodes, steps,
+                                   task_set),
+        "training_throughput": training_throughput(train_graphs, train_nodes,
+                                                   steps, task_set),
+        "labeler": labeler_throughput(),
+    }
+    biggest = str(max(int(k) for k in res["planner"]))
+    res["derived"] = (f"n={biggest} speedup="
+                      f"{res['planner'][biggest]['speedup_train_assign']:.1f}x "
+                      f"train_tput={res['training_throughput']['speedup']:.1f}x")
+    with open(out_path, "w") as f:
+        json.dump(res, f, indent=1, default=float)
+    return res
+
+
+def check_result(res: dict) -> None:
+    """Schema assertions the CI smoke job relies on."""
+    assert res["artifact"] == "plan_bench"
+    for section in ("machine", "config", "planner", "training_throughput",
+                    "labeler"):
+        assert section in res, section
+    assert res["labeler"]["identical"] is True
+    for n, row in res["planner"].items():
+        for mode in ("before", "after", "after_scan"):
+            for field in ("train_s", "assign_s", "recover_s", "total_s",
+                          "accuracy", "makespan_s"):
+                v = row[mode][field]
+                assert isinstance(v, (int, float)) and not math.isnan(v), \
+                    (n, mode, field, v)
+        assert math.isfinite(row["speedup_train_assign"]) \
+            and row["speedup_train_assign"] > 0
+    assert math.isfinite(res["training_throughput"]["speedup"])
+
+
+def plan_bench_artifact() -> dict:
+    """benchmarks/run.py entry: full sizes, writes BENCH_plan.json."""
+    res = run_plan_bench()
+    check_result(res)
+    return res
+
+
+ALL = [plan_bench_artifact]
+
+
+def main(argv=None) -> None:
+    _sys_path()
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes; assert the harness runs and emits "
+                         "valid JSON (CI)")
+    ap.add_argument("--sizes", type=int, nargs="+", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        sizes = tuple(args.sizes or SMOKE_SIZES)
+        out = args.out or SMOKE_OUT
+        res = run_plan_bench(sizes=sizes, train_graphs=8, train_nodes=12,
+                             steps=3, out_path=out, task_set="three")
+        with open(out) as f:  # must round-trip as valid JSON
+            check_result(json.load(f))
+        print(f"plan_bench --smoke PASS ({res['derived']}) wrote {out}")
+        return
+
+    res = run_plan_bench(sizes=tuple(args.sizes or SIZES),
+                         out_path=args.out or OUT)
+    check_result(res)
+    print(json.dumps({k: v for k, v in res.items() if k != "machine"},
+                     indent=1, default=float))
+    print(f"wrote {args.out or OUT}")
+
+
+if __name__ == "__main__":
+    main()

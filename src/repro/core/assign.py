@@ -86,12 +86,14 @@ def task_assignments(graph: ClusterGraph, tasks: Sequence[cm.ModelTask],
                 carry = []
             if _mem(graph, g_i) < task.min_memory_gb:
                 carry = g_i          # C <- i and continue
-                remaining = [r for r in remaining if r not in set(g_i)]
+                g_set = set(g_i)     # hoisted: `in set(g_i)` per element is O(n^2)
+                remaining = [r for r in remaining if r not in g_set]
                 deferred.append(task.name)
                 continue
 
         groups[task.name] = sorted(g_i)
-        remaining = [r for r in remaining if r not in set(g_i)]
+        g_set = set(g_i)
+        remaining = [r for r in remaining if r not in g_set]
 
         rest_tasks = [tasks[tj] for tj in order[idx + 1:]]
         if rest_tasks and _mem(graph, remaining + carry) < sum(
@@ -154,7 +156,8 @@ def _repair(graph, tasks, groups, deferred, remaining):
         if need <= 0 and got:
             groups[name] = sorted(got)
         else:
-            remaining.extend(i for i in got if i not in remaining)
+            rem_set = set(remaining)
+            remaining.extend(i for i in got if i not in rem_set)
             still_deferred.append(name)
     return groups, still_deferred, remaining
 

@@ -14,10 +14,18 @@ neighbours factorizes into dense matmuls:
     sum_u f = deg(v) * (v W_v) + A_mask @ (U W_u) + rowsum(A_lat) (x) w_e + deg(v) * b
 
 so the hot spot is the (n x n) @ (n x d) aggregation — served by the
-kernels/gcn_spmm Pallas kernel on TPU (jnp fallback elsewhere).
+kernels/gcn_spmm Pallas kernel on TPU (jnp fallback elsewhere). With
+``use_pallas`` the degree / Kipf-Welling normalization is fused into the
+kernel (``scaled_spmm``: one masked-aggregate op) instead of materializing
+the normalized (n, n) matrix and dividing after the matmul.
 
 The GCN layers use the Kipf-Welling normalized adjacency
 D^-1/2 (A + I) D^-1/2 computed from the mask (Eq. 1's 1/c_uv).
+
+``apply`` takes an optional ``node_mask`` so graphs padded into power-of-two
+node buckets (core.train's jit-cached fast inference path) are provably
+inert: masked-out nodes contribute no edges, no degree, and no edge-latency
+mass to any real node's output.
 """
 from __future__ import annotations
 
@@ -74,23 +82,35 @@ def n_params(params: PyTree) -> int:
     return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
 
 
-def _aggregate(adj: jnp.ndarray, h: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
-    """(n, n) @ (n, d) neighbourhood aggregation."""
-    if use_pallas:
-        from repro.kernels.gcn_spmm import ops as spmm_ops
-        return spmm_ops.spmm(adj, h)
-    return adj @ h
+def edge_mask(lat_adj: jnp.ndarray, node_mask: jnp.ndarray | None,
+              dtype) -> jnp.ndarray:
+    """0/1 edge mask; ``node_mask`` (n,) zeroes every edge touching padding."""
+    mask = (lat_adj > 0).astype(dtype)
+    if node_mask is not None:
+        mask = mask * node_mask[:, None] * node_mask[None, :]
+    return mask
 
 
 def edge_pool(params: PyTree, cfg: GNNConfig, feats: jnp.ndarray,
-              lat_adj: jnp.ndarray) -> jnp.ndarray:
+              lat_adj: jnp.ndarray,
+              node_mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """Eq. 4: embed edge (latency) information into node features."""
     p = params["edge_pool"]
-    mask = (lat_adj > 0).astype(feats.dtype)
+    mask = edge_mask(lat_adj, node_mask, feats.dtype)
+    if node_mask is not None:
+        # padding rows carry no features and no latency mass
+        feats = feats * node_mask[:, None]
+        lat_adj = lat_adj * mask
     deg = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)  # (n, 1)
     # mean-normalized sum over neighbours (keeps scales stable across degrees)
     self_term = feats @ p["w_self"]
-    neigh_term = _aggregate(mask, feats @ p["w_neigh"], cfg.use_pallas) / deg
+    if cfg.use_pallas:
+        from repro.kernels.gcn_spmm import ops as spmm_ops
+        neigh_term = spmm_ops.scaled_spmm(
+            mask, feats @ p["w_neigh"], 1.0 / deg[:, 0],
+            jnp.ones((mask.shape[1],), feats.dtype))
+    else:
+        neigh_term = (mask @ (feats @ p["w_neigh"])) / deg
     edge_rowsum = jnp.sum(lat_adj * cfg.edge_scale, axis=1, keepdims=True) / deg
     edge_term = edge_rowsum * p["w_edge"][None, :]
     return jax.nn.relu(self_term + neigh_term + edge_term + p["bias"])
@@ -105,21 +125,36 @@ def normalized_adjacency(mask: jnp.ndarray) -> jnp.ndarray:
 
 
 def apply(params: PyTree, cfg: GNNConfig, feats: jnp.ndarray,
-          lat_adj: jnp.ndarray) -> jnp.ndarray:
-    """Forward pass -> (n, n_classes) logits."""
-    h = edge_pool(params, cfg, feats, lat_adj)
-    mask = (lat_adj > 0).astype(feats.dtype)
-    a_norm = normalized_adjacency(mask)
-    for layer in params["gcn"]:
-        h = jax.nn.relu(_aggregate(a_norm, h, cfg.use_pallas) @ layer["w"]
-                        + h @ layer["w_self"] + layer["bias"])
+          lat_adj: jnp.ndarray,
+          node_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Forward pass -> (n, n_classes) logits. Rows where ``node_mask`` is 0
+    are padding: they never influence a real node's logits."""
+    h = edge_pool(params, cfg, feats, lat_adj, node_mask)
+    mask = edge_mask(lat_adj, node_mask, feats.dtype)
+    if cfg.use_pallas:
+        # fused path: Kipf-Welling scales ride inside the Pallas kernel
+        from repro.kernels.gcn_spmm import ops as spmm_ops
+        a = mask + jnp.eye(mask.shape[0], dtype=mask.dtype)
+        d = jnp.sum(a, axis=1)
+        inv_sqrt = jnp.where(d > 0, 1.0 / jnp.sqrt(d), 0.0)
+        for layer in params["gcn"]:
+            agg = spmm_ops.scaled_spmm(a, h, inv_sqrt, inv_sqrt)
+            h = jax.nn.relu(agg @ layer["w"] + h @ layer["w_self"]
+                            + layer["bias"])
+    else:
+        a_norm = normalized_adjacency(mask)
+        for layer in params["gcn"]:
+            h = jax.nn.relu((a_norm @ h) @ layer["w"]
+                            + h @ layer["w_self"] + layer["bias"])
     return h @ params["head"]["w"] + params["head"]["bias"]
 
 
 def loss_fn(params: PyTree, cfg: GNNConfig, feats, lat_adj, labels,
-            label_mask) -> tuple[jnp.ndarray, dict]:
-    """Masked cross-entropy (Eq. 5 — sparse supervision per paper §3)."""
-    logits = apply(params, cfg, feats, lat_adj)
+            label_mask, node_mask=None) -> tuple[jnp.ndarray, dict]:
+    """Masked cross-entropy (Eq. 5 — sparse supervision per paper §3).
+    ``label_mask`` must be 0 on padded rows, so padding never enters the
+    loss or accuracy denominators."""
+    logits = apply(params, cfg, feats, lat_adj, node_mask)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
     denom = jnp.maximum(jnp.sum(label_mask), 1.0)

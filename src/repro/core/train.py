@@ -1,12 +1,35 @@
-"""Supervised training of the Hulk GNN (paper §4, Fig. 4).
+"""Supervised training of the Hulk GNN (paper §4, Fig. 4) + the fast
+planning path.
 
 Full-batch node classification per graph with masked cross-entropy; Adam with
 the paper's hyperparameters (lr 0.01, ~188k params, 10 steps to ~99% node
 accuracy on the running example).
+
+Fast paths (the planner hot loop — see README "Performance"):
+
+* **Inference** — ``predict`` / ``predict_logits`` pad every graph into a
+  power-of-two node bucket with an explicit ``node_mask`` and run one
+  jit-compiled forward per ``(cfg, bucket, d_in)``. Algorithm 1
+  (``core.assign``) re-dispatches on a differently-sized subgraph each
+  iteration; bucketing compiles once per bucket instead of once per size.
+  ``trace_counts()`` exposes the per-bucket trace counter the no-silent-
+  recompile test asserts on.
+* **Training** — same-bucket ``GraphExample``s are stacked into
+  ``(G, n, ·)`` arrays and the whole run executes as one jitted,
+  buffer-donating ``lax.scan`` over epochs with an inner scan over graphs
+  (the same update trajectory as the historical Python loop, equal within
+  float tolerance — the fused scan compiles to differently-ordered float
+  ops); metrics
+  come back as ``(steps, G)`` arrays fetched once instead of a host sync per
+  graph-step. Ragged datasets fall back to per-bucket stacking; ``joint``
+  mode instead vmaps the masked loss across graphs and takes one Adam step
+  per epoch on the mean loss.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 from functools import partial
 from typing import Sequence
 
@@ -19,6 +42,13 @@ from repro.core import cost_model as cm
 from repro.core import labels as labels_mod
 from repro.core.graph import ClusterGraph, random_fleet
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+# Benchmark switch (benchmarks/plan_bench.py): turning ``bucketed_predict``
+# off restores the legacy eager per-subgraph inference path for before/after
+# comparisons.
+FLAGS = {"bucketed_predict": True}
+
+BUCKET_MIN = 8
 
 
 def gnn_config_for(tasks: Sequence[cm.ModelTask], **kw) -> gnn.GNNConfig:
@@ -51,6 +81,73 @@ def make_dataset(n_graphs: int, tasks: Sequence[cm.ModelTask], n_nodes: int = 24
     return out
 
 
+# ---------------------------------------------------------------------------
+# Bucketed jit-cached inference
+# ---------------------------------------------------------------------------
+def bucket_for(n: int) -> int:
+    """Power-of-two node bucket (>= BUCKET_MIN) a graph of n nodes pads into."""
+    return max(BUCKET_MIN, 1 << (int(n) - 1).bit_length())
+
+
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def trace_counts() -> dict:
+    """(cfg, bucket) -> number of times the forward was traced (compiled)."""
+    return dict(_TRACE_COUNTS)
+
+
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
+@functools.lru_cache(maxsize=None)
+def _bucketed_forward(cfg: gnn.GNNConfig, bucket: int, d_in: int):
+    """One compiled forward per (cfg, bucket, d_in); every Algorithm 1
+    subgraph landing in the same bucket reuses it."""
+    def fwd(params, feats, lat, node_mask):
+        _TRACE_COUNTS[(cfg, bucket)] += 1  # runs only while tracing
+        return gnn.apply(params, cfg, feats, lat, node_mask=node_mask)
+    return jax.jit(fwd)
+
+
+def _pad_graph(graph: ClusterGraph) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    feats = graph.node_features()
+    lat = graph.latency.astype(np.float32)
+    n, d = feats.shape
+    b = bucket_for(n)
+    pf = np.zeros((b, d), np.float32)
+    pf[:n] = feats
+    pl = np.zeros((b, b), np.float32)
+    pl[:n, :n] = lat
+    node_mask = np.zeros((b,), np.float32)
+    node_mask[:n] = 1.0
+    return pf, pl, node_mask
+
+
+def predict_logits(params, cfg: gnn.GNNConfig, graph: ClusterGraph, *,
+                   bucketed: bool | None = None) -> np.ndarray:
+    if bucketed is None:
+        bucketed = FLAGS["bucketed_predict"]
+    if not bucketed:  # legacy eager path, kept for before/after benchmarks
+        return np.asarray(gnn.apply(params, cfg,
+                                    jnp.asarray(graph.node_features()),
+                                    jnp.asarray(graph.latency.astype(np.float32))))
+    feats, lat, node_mask = _pad_graph(graph)
+    fwd = _bucketed_forward(cfg, node_mask.shape[0], feats.shape[1])
+    logits = fwd(params, feats, lat, node_mask)
+    return np.asarray(logits[:graph.n])
+
+
+def predict(params, cfg: gnn.GNNConfig, graph: ClusterGraph, *,
+            bucketed: bool | None = None) -> np.ndarray:
+    return np.argmax(predict_logits(params, cfg, graph, bucketed=bucketed),
+                     axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
 @partial(jax.jit, static_argnames=("cfg", "opt_cfg"))
 def _train_step(params, opt_state, cfg: gnn.GNNConfig, opt_cfg: AdamWConfig,
                 feats, lat, labels, mask):
@@ -61,20 +158,183 @@ def _train_step(params, opt_state, cfg: gnn.GNNConfig, opt_cfg: AdamWConfig,
     return params, opt_state, metrics
 
 
+def _stack_buckets(dataset: Sequence[GraphExample]) -> dict[int, dict]:
+    """Group examples by node bucket (order-preserving within a bucket) and
+    pad/stack each group into (G, b, ·) arrays. ``label_mask`` is 0 on padded
+    rows, so per-graph losses/grads equal their unpadded values exactly."""
+    groups: dict[int, list[GraphExample]] = {}
+    for ex in dataset:
+        groups.setdefault(bucket_for(ex.feats.shape[0]), []).append(ex)
+    stacks = {}
+    for b, exs in groups.items():
+        g, d = len(exs), exs[0].feats.shape[1]
+        feats = np.zeros((g, b, d), np.float32)
+        lat = np.zeros((g, b, b), np.float32)
+        labels = np.zeros((g, b), np.int64)
+        lmask = np.zeros((g, b), np.float32)
+        nmask = np.zeros((g, b), np.float32)
+        for i, ex in enumerate(exs):
+            n = ex.feats.shape[0]
+            feats[i, :n] = ex.feats
+            lat[i, :n, :n] = ex.lat
+            labels[i, :n] = ex.labels
+            lmask[i, :n] = ex.mask
+            nmask[i, :n] = 1.0
+        stacks[b] = {"feats": feats, "lat": lat, "labels": labels,
+                     "label_mask": lmask, "node_mask": nmask}
+    return stacks
+
+
+def _graph_scan_body(cfg, opt_cfg):
+    def body(carry, ex):
+        params, opt_state = carry
+        (_, metrics), grads = jax.value_and_grad(gnn.loss_fn, has_aux=True)(
+            params, cfg, ex["feats"], ex["lat"], ex["labels"],
+            ex["label_mask"], node_mask=ex["node_mask"])
+        params, opt_state, _ = adamw_update(opt_cfg, grads, opt_state, params)
+        return (params, opt_state), {"loss": metrics["loss"],
+                                     "accuracy": metrics["accuracy"]}
+    return body
+
+
+@partial(jax.jit, static_argnames=("cfg", "opt_cfg", "steps"),
+         donate_argnums=(0, 1))
+def _train_scan(params, opt_state, cfg, opt_cfg, steps, stack):
+    """Whole training run in one XLA program: scan over epochs, inner scan
+    over stacked graphs with per-graph Adam updates (the same trajectory as
+    the historical Python loop, modulo float reassociation under the fused
+    compilation). Metrics come out as (steps, G) arrays."""
+    body = _graph_scan_body(cfg, opt_cfg)
+
+    def epoch(carry, _):
+        carry, m = jax.lax.scan(body, carry, stack)
+        return carry, m
+
+    (params, opt_state), hist = jax.lax.scan(epoch, (params, opt_state), None,
+                                             length=steps)
+    return params, opt_state, hist
+
+
+@partial(jax.jit, static_argnames=("cfg", "opt_cfg"), donate_argnums=(0, 1))
+def _epoch_scan(params, opt_state, cfg, opt_cfg, stack):
+    """One epoch over one bucket's stack (ragged-dataset fallback)."""
+    body = _graph_scan_body(cfg, opt_cfg)
+    (params, opt_state), m = jax.lax.scan(body, (params, opt_state), stack)
+    return params, opt_state, m
+
+
+def _joint_loss(params, cfg, stack):
+    def one(feats, lat, labels, lmask, nmask):
+        loss, metrics = gnn.loss_fn(params, cfg, feats, lat, labels, lmask,
+                                    node_mask=nmask)
+        return loss, metrics
+    losses, metrics = jax.vmap(one)(stack["feats"], stack["lat"],
+                                    stack["labels"], stack["label_mask"],
+                                    stack["node_mask"])
+    return jnp.mean(losses), metrics
+
+
+@partial(jax.jit, static_argnames=("cfg", "opt_cfg", "steps"),
+         donate_argnums=(0, 1))
+def _train_joint_scan(params, opt_state, cfg, opt_cfg, steps, stack):
+    """vmapped masked loss across graphs, one Adam step per epoch on the
+    mean, scanned over epochs in one buffer-donating program."""
+    def epoch(carry, _):
+        params, opt_state = carry
+        (_, metrics), grads = jax.value_and_grad(
+            _joint_loss, has_aux=True)(params, cfg, stack)
+        params, opt_state, _ = adamw_update(opt_cfg, grads, opt_state, params)
+        return (params, opt_state), {"loss": metrics["loss"],
+                                     "accuracy": metrics["accuracy"]}
+
+    (params, opt_state), hist = jax.lax.scan(epoch, (params, opt_state), None,
+                                             length=steps)
+    return params, opt_state, hist
+
+
+def _history_from(hist) -> list[dict]:
+    loss = np.asarray(hist["loss"])    # (steps, G)
+    acc = np.asarray(hist["accuracy"])
+    return [{"step": s, "loss": float(loss[s].mean()),
+             "accuracy": float(acc[s].mean())} for s in range(loss.shape[0])]
+
+
 def train_gnn(cfg: gnn.GNNConfig, dataset: Sequence[GraphExample],
               steps: int = 10, lr: float = 0.01, seed: int = 0,
-              params=None):
+              params=None, mode: str = "auto"):
     """Train for `steps` epochs over the dataset; returns (params, history).
 
     With a single graph in the dataset this reproduces the paper's Fig. 4
-    setting (10 steps, lr 0.01)."""
+    setting (10 steps, lr 0.01).
+
+    ``mode``: "scan" (default via "auto" when every graph lands in one node
+    bucket) runs the whole thing as a single jitted scan with per-graph Adam
+    updates — the same trajectory as "sequential" (the historical Python
+    loop kept as the readable reference and benchmark baseline), equal
+    within float tolerance. Ragged
+    datasets fall back to per-bucket stacks ("bucketed", processed
+    bucket-by-bucket each epoch). "joint" takes one Adam step per epoch on
+    the vmapped mean loss across graphs.
+    """
     d_in = dataset[0].feats.shape[1]
     key = jax.random.PRNGKey(seed)
     if params is None:
         params = gnn.init(key, cfg, d_in)
+    else:
+        # the fast paths donate the param buffers; never invalidate the
+        # caller's copy
+        params = jax.tree.map(lambda x: jnp.array(x, copy=True), params)
     opt_cfg = AdamWConfig(learning_rate=lr, weight_decay=0.0, b2=0.999,
                           grad_clip_norm=0.0)
     opt_state = adamw_init(params)
+
+    if mode == "sequential":
+        return _train_sequential(cfg, dataset, steps, opt_cfg, params,
+                                 opt_state)
+
+    stacks = _stack_buckets(dataset)
+    if mode == "auto":
+        mode = "scan" if len(stacks) == 1 else "bucketed"
+
+    if mode == "joint":
+        if len(stacks) != 1:
+            raise ValueError("joint mode needs all graphs in one node bucket;"
+                             " use mode='bucketed' for ragged datasets")
+        (stack,) = stacks.values()
+        params, opt_state, hist = _train_joint_scan(params, opt_state, cfg,
+                                                    opt_cfg, steps, stack)
+        return params, _history_from(hist)
+
+    if mode == "scan":
+        if len(stacks) != 1:
+            raise ValueError("scan mode needs all graphs in one node bucket;"
+                             " use mode='bucketed' for ragged datasets")
+        (stack,) = stacks.values()
+        params, opt_state, hist = _train_scan(params, opt_state, cfg, opt_cfg,
+                                              steps, stack)
+        return params, _history_from(hist)
+
+    if mode == "bucketed":
+        history = []
+        for step in range(steps):
+            losses, accs = [], []
+            for stack in stacks.values():
+                params, opt_state, m = _epoch_scan(params, opt_state, cfg,
+                                                   opt_cfg, stack)
+                losses.append(np.asarray(m["loss"]))
+                accs.append(np.asarray(m["accuracy"]))
+            history.append({"step": step,
+                            "loss": float(np.concatenate(losses).mean()),
+                            "accuracy": float(np.concatenate(accs).mean())})
+        return params, history
+
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def _train_sequential(cfg, dataset, steps, opt_cfg, params, opt_state):
+    """The historical per-graph Python loop: jitted step per (graph, epoch)
+    with a host sync after every step. Kept as the readable reference the
+    equivalence tests compare against and plan_bench's "before" path."""
     history = []
     for step in range(steps):
         losses, accs = [], []
@@ -88,15 +348,3 @@ def train_gnn(cfg: gnn.GNNConfig, dataset: Sequence[GraphExample],
         history.append({"step": step, "loss": float(np.mean(losses)),
                         "accuracy": float(np.mean(accs))})
     return params, history
-
-
-def predict(params, cfg: gnn.GNNConfig, graph: ClusterGraph) -> np.ndarray:
-    logits = gnn.apply(params, cfg, jnp.asarray(graph.node_features()),
-                       jnp.asarray(graph.latency.astype(np.float32)))
-    return np.asarray(jnp.argmax(logits, axis=-1))
-
-
-def predict_logits(params, cfg: gnn.GNNConfig, graph: ClusterGraph) -> np.ndarray:
-    return np.asarray(gnn.apply(params, cfg,
-                                jnp.asarray(graph.node_features()),
-                                jnp.asarray(graph.latency.astype(np.float32))))

@@ -58,3 +58,52 @@ def spmm_blocked(adj, feats, *, block_i: int = DEFAULT_BLOCK_I,
         scratch_shapes=[pltpu.VMEM((block_i, d), jnp.float32)],
         interpret=interpret,
     )(adj, feats)
+
+
+def _scaled_spmm_kernel(a_ref, h_ref, r_ref, c_ref, o_ref, acc_scr):
+    """diag(r) @ A @ diag(c) @ H fused into the tile loop: the column scale
+    multiplies each adjacency tile before it hits the MXU, the row scale
+    multiplies the fp32 accumulator once on the last K step — the normalized
+    (N, N) matrix is never materialized."""
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    a = a_ref[...].astype(jnp.float32)              # (BI, BK)
+    c = c_ref[...].astype(jnp.float32)              # (1, BK)
+    h = h_ref[...].astype(jnp.float32)              # (BK, D)
+    acc_scr[...] += jax.lax.dot_general(
+        a * c, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        r = r_ref[...].astype(jnp.float32)          # (BI, 1)
+        o_ref[...] = (acc_scr[...] * r).astype(o_ref.dtype)
+
+
+def scaled_spmm_blocked(adj, feats, row_scale, col_scale, *,
+                        block_i: int = DEFAULT_BLOCK_I,
+                        block_k: int = DEFAULT_BLOCK_K, interpret: bool = True):
+    """(diag(row_scale) @ adj @ diag(col_scale)) @ feats in one pass.
+
+    adj (M, N), feats (N, D), row_scale (M, 1), col_scale (1, N); blocks
+    divide M/N and D is lane-aligned (ops.py pads)."""
+    n, d = feats.shape
+    ni, nk = adj.shape[0] // block_i, n // block_k
+    return pl.pallas_call(
+        functools.partial(_scaled_spmm_kernel),
+        grid=(ni, nk),
+        in_specs=[
+            pl.BlockSpec((block_i, block_k), lambda i, k: (i, k)),
+            pl.BlockSpec((block_k, d), lambda i, k: (k, 0)),
+            pl.BlockSpec((block_i, 1), lambda i, k: (i, 0)),
+            pl.BlockSpec((1, block_k), lambda i, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((block_i, d), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((adj.shape[0], d), feats.dtype),
+        scratch_shapes=[pltpu.VMEM((block_i, d), jnp.float32)],
+        interpret=interpret,
+    )(adj, feats, row_scale, col_scale)

@@ -26,3 +26,28 @@ def spmm(adj, feats, *, force_ref: bool = False):
     interpret = jax.default_backend() != "tpu"
     o = _k.spmm_blocked(a, h, block_i=bi, block_k=bk, interpret=interpret)
     return o[:adj.shape[0], :d]
+
+
+@functools.partial(jax.jit, static_argnames=("force_ref",))
+def scaled_spmm(adj, feats, row_scale, col_scale, *, force_ref: bool = False):
+    """(diag(row_scale) @ adj @ diag(col_scale)) @ feats -> (M, D) in one
+    fused masked-aggregate op (degree / Kipf-Welling normalization rides
+    inside the kernel). adj (M, N), feats (N, D), row_scale (M,),
+    col_scale (N,); any shapes (padded internally, scales padded with 0 so
+    padding rows/cols are inert)."""
+    if force_ref:
+        return _ref.scaled_spmm_ref(adj, feats, row_scale, col_scale)
+    n, d = feats.shape
+    bi = min(_k.DEFAULT_BLOCK_I, max(8, 1 << (n - 1).bit_length()))
+    bk = min(_k.DEFAULT_BLOCK_K, max(8, 1 << (n - 1).bit_length()))
+    pad_n_i = (-adj.shape[0]) % bi
+    pad_n_k = (-n) % bk
+    pad_d = (-d) % 128
+    a = jnp.pad(adj, ((0, pad_n_i), (0, pad_n_k)))
+    h = jnp.pad(feats, ((0, pad_n_k), (0, pad_d)))
+    r = jnp.pad(row_scale.astype(feats.dtype), (0, pad_n_i))[:, None]
+    c = jnp.pad(col_scale.astype(feats.dtype), (0, pad_n_k))[None, :]
+    interpret = jax.default_backend() != "tpu"
+    o = _k.scaled_spmm_blocked(a, h, r, c, block_i=bi, block_k=bk,
+                               interpret=interpret)
+    return o[:adj.shape[0], :d]

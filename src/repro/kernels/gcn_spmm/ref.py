@@ -1,7 +1,16 @@
-"""Pure-jnp oracle for the GCN aggregation."""
+"""Pure-jnp oracles for the GCN aggregation kernels."""
 import jax.numpy as jnp
 
 
 def spmm_ref(adj, feats):
     return (adj.astype(jnp.float32) @ feats.astype(jnp.float32)).astype(
         feats.dtype)
+
+
+def scaled_spmm_ref(adj, feats, row_scale, col_scale):
+    """(diag(r) @ adj @ diag(c)) @ feats, mirroring the kernel's operation
+    order (column scale before the matmul, row scale on the fp32 accumulator)
+    so the fallback stays bit-compatible with the fused Pallas path."""
+    a = adj.astype(jnp.float32) * col_scale.astype(jnp.float32)[None, :]
+    acc = a @ feats.astype(jnp.float32)
+    return (acc * row_scale.astype(jnp.float32)[:, None]).astype(feats.dtype)

@@ -1,0 +1,233 @@
+"""Fast planning path: numerical equivalence + no-silent-recompile tests.
+
+Covers the four legs of the perf pass:
+  * bucketed/padded predict == the unpadded eager forward on every bucket
+    boundary (n = bucket, bucket±1);
+  * batched training == the sequential reference (bit-exact for the scan
+    mode, within tolerance for the vmapped joint mode vs a hand-rolled
+    sequential loop of the same full-batch algorithm);
+  * fused scaled_spmm (Pallas, interpret mode on CPU) == the jnp oracle;
+  * vectorized oracle labeler == the reference Python loops, bit-identical;
+plus a trace-counting test proving Algorithm 1 compiles the GNN at most once
+per node bucket.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import assign as assign_mod
+from repro.core import cost_model as cm
+from repro.core import gnn
+from repro.core import labels as labels_mod
+from repro.core import train as gnn_train
+from repro.core.graph import random_fleet
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+SMALL_TASKS = [cm.GPT2_1_5B, cm.BERT_LARGE]
+
+
+def _tree_allclose(a, b, rtol=1e-4, atol=1e-5):
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# bucketed inference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [7, 8, 9, 15, 16, 17, 31, 32, 33])
+def test_bucketed_predict_matches_unpadded(n):
+    """Padding into the bucket must be inert at n = bucket and bucket±1."""
+    fleet = random_fleet(n, seed=n)
+    cfg = gnn_train.gnn_config_for(SMALL_TASKS, hidden=48)
+    params = gnn.init(jax.random.PRNGKey(2), cfg, 12)
+    direct = np.asarray(gnn.apply(
+        params, cfg, jnp.asarray(fleet.node_features()),
+        jnp.asarray(fleet.latency.astype(np.float32))))
+    bucketed = gnn_train.predict_logits(params, cfg, fleet, bucketed=True)
+    assert bucketed.shape == (n, cfg.n_classes)
+    np.testing.assert_allclose(bucketed, direct, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(
+        gnn_train.predict(params, cfg, fleet, bucketed=True),
+        np.argmax(direct, axis=-1))
+
+
+def test_node_mask_makes_padding_inert():
+    """Garbage in the padded region must not leak into real logits."""
+    fleet = random_fleet(11, seed=3)
+    cfg = gnn_train.gnn_config_for(SMALL_TASKS, hidden=32)
+    feats = fleet.node_features()
+    params = gnn.init(jax.random.PRNGKey(1), cfg, feats.shape[1])
+    direct = np.asarray(gnn.apply(params, cfg, jnp.asarray(feats),
+                                  jnp.asarray(fleet.latency.astype(np.float32))))
+    b = gnn_train.bucket_for(11)
+    rng = np.random.default_rng(0)
+    pf = rng.normal(size=(b, feats.shape[1])).astype(np.float32)
+    pf[:11] = feats
+    pl = rng.uniform(1.0, 500.0, size=(b, b)).astype(np.float32)
+    pl[:11, :11] = fleet.latency.astype(np.float32)
+    nm = np.zeros((b,), np.float32)
+    nm[:11] = 1.0
+    padded = gnn.apply(params, cfg, jnp.asarray(pf), jnp.asarray(pl),
+                       jnp.asarray(nm))
+    np.testing.assert_allclose(np.asarray(padded)[:11], direct,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_task_assignments_compiles_once_per_bucket():
+    """A 24-node fleet with 3 tasks re-dispatches Algorithm 1 on shrinking
+    subgraphs; the bucketed forward must trace at most once per bucket."""
+    tasks = cm.FOUR_TASKS[1:]  # T5 / GPT-2 / BERT fit a 24-node fleet
+    cfg = gnn_train.gnn_config_for(tasks, hidden=37)  # unique cfg => fresh cache
+    ds = gnn_train.make_dataset(2, tasks, n_nodes=24, seed=11, label_frac=0.8)
+    params, _ = gnn_train.train_gnn(cfg, ds, steps=3, lr=0.01)
+    fleet = random_fleet(24, seed=6)
+    gnn_train.reset_trace_counts()
+    assign_mod.task_assignments(fleet, tasks, params, cfg)
+    counts = {bucket: c for (c_cfg, bucket), c in gnn_train.trace_counts().items()
+              if c_cfg == cfg}
+    assert counts, "bucketed path was not exercised"
+    assert all(c <= 1 for c in counts.values()), counts
+    # subgraphs only shrink from 24, so buckets are a subset of {32, 16, 8}
+    assert set(counts) <= {8, 16, 32}, counts
+
+
+# ---------------------------------------------------------------------------
+# batched training
+# ---------------------------------------------------------------------------
+def test_scan_training_matches_sequential_loop():
+    """The stacked scan path must reproduce the sequential per-graph loop's
+    final params on a 3-graph dataset (same update trajectory)."""
+    cfg = gnn_train.gnn_config_for(SMALL_TASKS)
+    ds = gnn_train.make_dataset(3, SMALL_TASKS, n_nodes=12, seed=0,
+                                label_frac=0.8)
+    p_seq, h_seq = gnn_train.train_gnn(cfg, ds, steps=6, lr=0.01,
+                                       mode="sequential")
+    p_scan, h_scan = gnn_train.train_gnn(cfg, ds, steps=6, lr=0.01,
+                                         mode="scan")
+    _tree_allclose(p_seq, p_scan, rtol=1e-4, atol=1e-5)
+    for a, b in zip(h_seq, h_scan):
+        assert abs(a["loss"] - b["loss"]) < 1e-4
+        assert abs(a["accuracy"] - b["accuracy"]) < 1e-6
+
+
+def test_joint_training_matches_sequential_loop():
+    """The vmapped joint mode must match a sequential loop of the same
+    algorithm: mean masked loss over graphs, one Adam step per epoch."""
+    cfg = gnn_train.gnn_config_for(SMALL_TASKS)
+    ds = gnn_train.make_dataset(3, SMALL_TASKS, n_nodes=12, seed=1,
+                                label_frac=0.8)
+    steps, lr = 5, 0.01
+
+    params = gnn.init(jax.random.PRNGKey(0), cfg, ds[0].feats.shape[1])
+    opt_cfg = AdamWConfig(learning_rate=lr, weight_decay=0.0, b2=0.999,
+                          grad_clip_norm=0.0)
+    opt_state = adamw_init(params)
+    grad_fn = jax.grad(lambda p, ex: gnn.loss_fn(
+        p, cfg, jnp.asarray(ex.feats), jnp.asarray(ex.lat),
+        jnp.asarray(ex.labels), jnp.asarray(ex.mask))[0])
+    for _ in range(steps):
+        grads = None
+        for ex in ds:  # sequential loop over graphs, then one mean update
+            g = grad_fn(params, ex)
+            grads = g if grads is None else jax.tree.map(jnp.add, grads, g)
+        grads = jax.tree.map(lambda x: x / len(ds), grads)
+        params, opt_state, _ = adamw_update(opt_cfg, grads, opt_state, params)
+
+    p_joint, _ = gnn_train.train_gnn(cfg, ds, steps=steps, lr=lr, mode="joint")
+    # vmapped-mean vs sum-then-divide accumulate in different orders; Adam's
+    # rsqrt amplifies the last-ulp drift over the 5 steps
+    _tree_allclose(params, p_joint, rtol=1e-3, atol=2e-4)
+
+
+def test_bucketed_mode_handles_ragged_datasets():
+    """Graphs in different node buckets fall back to per-bucket stacking."""
+    ds = (gnn_train.make_dataset(2, SMALL_TASKS, n_nodes=10, seed=2,
+                                 label_frac=0.8)
+          + gnn_train.make_dataset(2, SMALL_TASKS, n_nodes=20, seed=4,
+                                   label_frac=0.8))
+    cfg = gnn_train.gnn_config_for(SMALL_TASKS)
+    params, hist = gnn_train.train_gnn(cfg, ds, steps=8, lr=0.01)  # auto
+    assert len(hist) == 8
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert np.isfinite(hist[-1]["accuracy"])
+
+
+# ---------------------------------------------------------------------------
+# fused kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,d,dtype", [
+    (8, 22, jnp.float32),
+    (46, 15, jnp.float32),
+    (128, 213, jnp.float32),
+    (200, 64, jnp.float32),
+    (46, 12, jnp.bfloat16),
+])
+def test_scaled_spmm_vs_ref(n, d, dtype):
+    from repro.kernels.gcn_spmm import ops as spmm_ops
+    from repro.kernels.gcn_spmm import ref as spmm_ref
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    adj = (jax.random.uniform(ks[0], (n, n)) < 0.4).astype(dtype)
+    h = jax.random.normal(ks[1], (n, d), dtype)
+    r = (jax.random.uniform(ks[2], (n,)) + 0.5).astype(dtype)
+    c = (jax.random.uniform(ks[3], (n,)) + 0.5).astype(dtype)
+    got = spmm_ops.scaled_spmm(adj, h, r, c)
+    want = spmm_ref.scaled_spmm_ref(adj, h, r, c)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+    # and against the mathematical definition diag(r) @ A @ diag(c) @ H
+    dense = (r.astype(jnp.float32)[:, None] * adj.astype(jnp.float32)
+             * c.astype(jnp.float32)[None, :]) @ h.astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(dense), **tol)
+
+
+def test_pallas_bucketed_predict_matches_jnp():
+    """use_pallas=True (fused normalization, interpret mode on CPU) through
+    the bucketed fast path must match the plain jnp forward."""
+    fleet = random_fleet(10, seed=8)
+    cfg_j = gnn_train.gnn_config_for(SMALL_TASKS, hidden=32, use_pallas=False)
+    cfg_p = gnn_train.gnn_config_for(SMALL_TASKS, hidden=32, use_pallas=True)
+    params = gnn.init(jax.random.PRNGKey(0), cfg_j, 12)
+    out_j = gnn_train.predict_logits(params, cfg_j, fleet, bucketed=True)
+    out_p = gnn_train.predict_logits(params, cfg_p, fleet, bucketed=True)
+    np.testing.assert_allclose(out_p, out_j, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# vectorized labeler
+# ---------------------------------------------------------------------------
+def _disconnected_fleet(n=9, seed=0):
+    """Three components with no links between them (latency 0 = blocked):
+    regression case for the pool-restricted argmin — with every free node at
+    inf distance a whole-row argmin would steal already-assigned nodes."""
+    from repro.core.graph import ClusterGraph
+    base = random_fleet(n, seed=seed)
+    lat = base.latency.copy()
+    for a in range(n):
+        for b in range(n):
+            if a // 3 != b // 3:
+                lat[a, b] = 0.0
+    return ClusterGraph(base.machines, lat)
+
+
+@pytest.mark.parametrize("n,seed,tasks,fleet_fn", [
+    (16, 0, cm.FOUR_TASKS, random_fleet),
+    (24, 5, cm.FOUR_TASKS, random_fleet),
+    (33, 2, cm.SIX_TASKS, random_fleet),
+    (9, 4, cm.FOUR_TASKS[2:], lambda n, seed: _disconnected_fleet(n, seed)),
+])
+def test_labeler_matches_reference_bit_identically(n, seed, tasks, fleet_fn):
+    g = fleet_fn(n, seed=seed)
+    comm = cm.make_comm(g)
+    fast_g = labels_mod.greedy_partition(g, tasks, comm, seed)
+    ref_g = labels_mod.greedy_partition_reference(g, tasks, comm, seed)
+    np.testing.assert_array_equal(fast_g, ref_g)
+    fast_l = labels_mod.local_search(g, fast_g, tasks, comm, iters=60,
+                                     seed=seed)
+    ref_l = labels_mod.local_search_reference(g, ref_g, tasks, comm, iters=60,
+                                              seed=seed)
+    np.testing.assert_array_equal(fast_l, ref_l)
