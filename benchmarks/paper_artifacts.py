@@ -24,7 +24,7 @@ from repro.core.graph import paper_fig1_graph, paper_fleet46
 _TRAINED_CACHE: dict = {}
 
 
-def _trained(tasks, seed=0, steps=30, extra_graphs=4):
+def _trained(tasks, seed=0, steps=150, extra_graphs=4):
     """Train once per (tasks, seed, steps, extra_graphs): table2 / fig8 /
     alpha_beta_check share identical trained params, so retraining them per
     artifact only burned wall-clock without changing any output."""
@@ -132,9 +132,10 @@ def edge_pooling_ablation() -> dict:
         ex.feats, (ex.lat > 0).astype(np.float32), ex.labels, ex.mask)
         for ex in train_ds]
 
-    params_full, hist_full = gnn_train.train_gnn(cfg, train_ds, steps=25,
+    # joint default mode: ~5x the old sequential epoch count
+    params_full, hist_full = gnn_train.train_gnn(cfg, train_ds, steps=120,
                                                  lr=0.01, seed=5)
-    params_abl, hist_abl = gnn_train.train_gnn(cfg, abl_ds, steps=25,
+    params_abl, hist_abl = gnn_train.train_gnn(cfg, abl_ds, steps=120,
                                                lr=0.01, seed=5)
 
     # held-out fleets: compare realized makespans of Algorithm 1 placements
@@ -182,7 +183,7 @@ def thousand_node_scale() -> dict:
     cfg = gnn_train.gnn_config_for(tasks)
     ds = gnn_train.make_dataset(3, tasks, n_nodes=48, seed=21,
                                 label_frac=0.8)
-    params, _ = gnn_train.train_gnn(cfg, ds, steps=15, lr=0.01)
+    params, _ = gnn_train.train_gnn(cfg, ds, steps=50, lr=0.01)
 
     t0 = time.time()
     fleet = random_fleet(1024, seed=7)

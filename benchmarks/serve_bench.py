@@ -1,0 +1,240 @@
+"""Serving benchmark: routing policies vs scenarios + replica calibration.
+
+Three sections, written to benchmarks/BENCH_serve.json:
+
+* ``calibration`` — the zero-contention, single-region serving simulation
+  must reproduce the analytic replica throughput derived from
+  ``analysis.hlo_cost`` per-token costs within 1% (the serving analogue of
+  the PR 1 sim-calibration contract).
+* ``measured`` (full runs only) — drives the real ``launch.serve``
+  batched-decode loop on a CPU-reduced model and reports its
+  machine-readable stats dict next to the HLO-derived per-token costs, so
+  simulated replicas can be re-costed from hardware you actually ran on:
+  ``effective_tflops = decode_flops_per_token x measured tokens/s / 1e12``.
+* ``scenarios`` — nearest / weighted-least-loaded / Hulk-GNN-scored routing
+  across every registered serving scenario (diurnal follow-the-sun,
+  regional burst, replica-failure-under-load), reporting p50/p95/p99
+  latency, goodput and SLO-violation rate, plus the Hulk-vs-nearest gains.
+
+``python -m benchmarks.serve_bench --smoke`` runs a time-scaled version and
+asserts the emitted JSON round-trips (the CI job), writing
+BENCH_serve.smoke.json.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import platform
+import sys
+import time
+
+
+def _sys_path():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+SMOKE_OUT = os.path.join(os.path.dirname(__file__), "BENCH_serve.smoke.json")
+POLICIES = ("nearest", "least_loaded", "hulk")
+
+
+# ---------------------------------------------------------------------------
+# Calibration vs analysis.hlo_cost per-token costs
+# ---------------------------------------------------------------------------
+def _hlo_serve_model():
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.serve import serve_model_from_config
+    cfg = dataclasses.replace(reduce_for_smoke(get_config("gemma3-1b")),
+                              remat=False)
+    return cfg, serve_model_from_config(cfg, batch=2, prompt_len=16,
+                                        gen_tokens=8, name="gemma3-smoke")
+
+
+def calibration(n_requests: int = 32) -> dict:
+    import numpy as np
+
+    from repro.core.graph import ClusterGraph, Machine
+    from repro.serve import Request
+    from repro.sim import ServeExecutor
+
+    _, sm = _hlo_serve_model()
+    tflops = 1e-3
+    g = ClusterGraph([Machine.from_caps("California", 8.0, 1.0, tflops,
+                                        "calib")],
+                     np.zeros((1, 1), np.float32))
+    trace = [Request(rid=i, t_arrival=0.0, region="California",
+                     model=sm.name, prompt_tokens=24, gen_tokens=16)
+             for i in range(n_requests)]
+    raw = ServeExecutor(g, sm, trace, "nearest", n_replicas=1, max_batch=4,
+                        seed=0).run()
+    recs = list(raw["records"].values())
+    t_end = max(r.t_complete for r in recs)
+    analytic = sum(sm.service_s(r.req.prompt_tokens, r.req.gen_tokens,
+                                tflops) for r in recs)
+    rel_err = abs(t_end - analytic) / analytic
+    return {
+        "model": sm.name,
+        "prefill_flops_per_token": sm.prefill_flops_per_token,
+        "decode_flops_per_token": sm.decode_flops_per_token,
+        "kv_bytes_per_token": sm.kv_bytes_per_token,
+        "n_requests": n_requests,
+        "simulated_s": t_end,
+        "analytic_s": analytic,
+        "rel_error": rel_err,
+        "within_1pct": bool(rel_err < 0.01),
+    }
+
+
+def measured_decode(batch: int = 2, prompt_len: int = 16,
+                    gen_tokens: int = 12) -> dict:
+    """Run the real serving loop once and translate its measured decode rate
+    into the effective FLOP/s a simulated replica should be given."""
+    import jax
+
+    from repro.data.synthetic import SyntheticConfig, make_batch
+    from repro.launch.serve import serve_batch
+    from repro.models.registry import get_api
+
+    cfg, sm = _hlo_serve_model()
+    api = get_api(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch_arrs = {k: jax.numpy.asarray(v) for k, v in make_batch(
+        cfg, SyntheticConfig(global_batch=batch, seq_len=prompt_len,
+                             seed=0), 0).items()}
+    _, stats = serve_batch(cfg, params, batch_arrs, gen_tokens,
+                           log=lambda *_: None)
+    eff = sm.decode_flops_per_token * stats["tokens_per_s"] / 1e12 \
+        / sm.decode_efficiency
+    return {"stats": stats,
+            "decode_flops_per_token_hlo": sm.decode_flops_per_token,
+            "effective_tflops_for_sim_replica": eff}
+
+
+# ---------------------------------------------------------------------------
+# Scenario sweep
+# ---------------------------------------------------------------------------
+def _scaled(scn, time_scale: float):
+    """A time-compressed copy of a serving scenario (same rates => same
+    queueing regime, shorter trace)."""
+    if time_scale >= 1.0:
+        return scn
+    orig_traffic = scn.traffic
+
+    def traffic(graph):
+        cfg = orig_traffic(graph)
+        h = cfg.horizon_s * time_scale
+        window = cfg.burst_window
+        if window is not None:
+            window = (window[0] * time_scale, window[1] * time_scale)
+        return dataclasses.replace(cfg, horizon_s=h, burst_window=window)
+    return dataclasses.replace(scn, traffic=traffic)
+
+
+def scenario_sweep(time_scale: float = 1.0, seed: int = 0) -> dict:
+    from repro.serve import evaluate_serve_scenario, serve_comparison_table
+    from repro.sim import SERVE_SCENARIOS, get_serve_scenario
+
+    results = {}
+    for name in sorted(SERVE_SCENARIOS):
+        scn = _scaled(get_serve_scenario(name), time_scale)
+        results[name] = evaluate_serve_scenario(scn, seed=seed,
+                                                policies=POLICIES)
+    table = serve_comparison_table(results)
+    print(table, file=sys.stderr)
+    return {"results": results, "table": table}
+
+
+def run_serve_bench(time_scale: float = 1.0, include_measured: bool = True,
+                    out_path: str = OUT, seed: int = 0) -> dict:
+    import jax
+
+    res = {
+        "artifact": "serve_bench",
+        "machine": {"platform": platform.platform(),
+                    "backend": jax.default_backend(),
+                    "jax": jax.__version__},
+        "config": {"time_scale": time_scale, "seed": seed,
+                   "policies": list(POLICIES)},
+        "calibration": calibration(),
+    }
+    if include_measured:
+        res["measured"] = measured_decode()
+    sweep = scenario_sweep(time_scale, seed=seed)
+    res["scenarios"] = sweep["results"]
+    res["table"] = sweep["table"]
+
+    wins = sum(1 for r in res["scenarios"].values()
+               if r.get("hulk_vs_nearest", {}).get("hulk_beats_nearest"))
+    res["derived"] = (f"calib_err={res['calibration']['rel_error']:.1e} "
+                      f"hulk_beats_nearest={wins}/{len(res['scenarios'])}")
+    with open(out_path, "w") as f:
+        json.dump(res, f, indent=1, default=float)
+    return res
+
+
+def check_result(res: dict) -> None:
+    """Schema + acceptance assertions the CI smoke job relies on."""
+    assert res["artifact"] == "serve_bench"
+    assert res["calibration"]["within_1pct"] is True, res["calibration"]
+    scenarios = res["scenarios"]
+    assert {"serve_diurnal", "serve_regional_burst",
+            "serve_replica_failure"} <= set(scenarios)
+    for name, row in scenarios.items():
+        for policy in POLICIES:
+            m = row[policy]
+            for field in ("p50_s", "p95_s", "p99_s", "goodput_rps",
+                          "slo_violation_rate", "throughput_tps"):
+                assert isinstance(m[field], (int, float)) \
+                    and not math.isnan(m[field]), (name, policy, field)
+            assert 0.0 <= m["slo_violation_rate"] <= 1.0
+            assert m["n_completed"] > 0, (name, policy)
+    # acceptance: Hulk-GNN placement beats nearest-healthy on the diurnal
+    # and burst scenarios
+    for name in ("serve_diurnal", "serve_regional_burst"):
+        assert scenarios[name]["hulk_vs_nearest"]["hulk_beats_nearest"], name
+
+
+def serve_bench_artifact() -> dict:
+    """benchmarks/run.py entry: full scale, writes BENCH_serve.json."""
+    res = run_serve_bench()
+    check_result(res)
+    return res
+
+
+ALL = [serve_bench_artifact]
+
+
+def main(argv=None) -> None:
+    _sys_path()
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="time-compressed scenarios, no live decode "
+                         "measurement; assert the harness emits valid JSON "
+                         "(CI)")
+    ap.add_argument("--time-scale", type=float, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        out = args.out or SMOKE_OUT
+        res = run_serve_bench(time_scale=args.time_scale or 0.4,
+                              include_measured=False, out_path=out)
+        with open(out) as f:   # must round-trip as valid JSON
+            check_result(json.load(f))
+        print(f"serve_bench --smoke PASS ({res['derived']}) wrote {out}")
+        return
+
+    res = run_serve_bench(time_scale=args.time_scale or 1.0,
+                          out_path=args.out or OUT)
+    check_result(res)
+    print(json.dumps({k: v for k, v in res.items()
+                      if k not in ("machine", "table")},
+                     indent=1, default=float))
+    print(f"wrote {args.out or OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,8 @@ def main():
     cfg = gnn_train.gnn_config_for(tasks)
     ds = gnn_train.make_dataset(4, tasks, n_nodes=46, seed=1, label_frac=0.8)
     ds.append(gnn_train.make_example(fleet, tasks, seed=0))
-    params, _ = gnn_train.train_gnn(cfg, ds, steps=25, lr=0.01)
+    # joint default mode: ~5x the old sequential epoch count (1 update/epoch)
+    params, _ = gnn_train.train_gnn(cfg, ds, steps=120, lr=0.01)
 
     rt = ElasticRuntime(fleet, tasks, params, cfg)
     print("initial groups:")

@@ -27,7 +27,8 @@ def main():
     dataset = gnn_train.make_dataset(4, tasks, n_nodes=8, seed=1,
                                      label_frac=0.8)
     dataset.append(gnn_train.make_example(graph, tasks, seed=0))
-    params, hist = gnn_train.train_gnn(cfg, dataset, steps=20, lr=0.01)
+    # joint default mode: ~5x the old sequential epoch count (1 update/epoch)
+    params, hist = gnn_train.train_gnn(cfg, dataset, steps=100, lr=0.01)
     print(f"GNN trained: acc {hist[0]['accuracy']:.2f} -> "
           f"{hist[-1]['accuracy']:.2f}")
 

@@ -27,8 +27,9 @@ def main():
 
     batch = {k: jnp.asarray(v) for k, v in make_batch(
         cfg, SyntheticConfig(global_batch=4, seq_len=32, seed=0), 0).items()}
-    gen, tps = serve_batch(cfg, params, batch, gen_tokens=16)
-    print(f"batch of 4 requests -> 16 tokens each")
+    gen, stats = serve_batch(cfg, params, batch, gen_tokens=16)
+    print(f"batch of 4 requests -> 16 tokens each "
+          f"({stats['tokens_per_s']:.1f} decode tok/s)")
     for i, row in enumerate(gen):
         print(f"  request {i}: {row.tolist()}")
 

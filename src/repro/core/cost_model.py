@@ -222,7 +222,49 @@ def tp_time(graph: ClusterGraph, ids: Sequence[int], task: ModelTask,
 
 def greedy_chain_order(graph: ClusterGraph, ids: Sequence[int]) -> list[int]:
     """Nearest-neighbour chain through the group (cheap TSP heuristic) so the
-    GPipe boundary hops ride the fastest links — part of Hulk's placement."""
+    GPipe boundary hops ride the fastest links — part of Hulk's placement.
+
+    Vectorized: the k-step chain walk does one numpy argmin over the free
+    row per step instead of a Python ``min`` over a lambda (the O(k^2)
+    Python loop inside every labeler ``_group_cost`` call). Produces the
+    same order as ``greedy_chain_order_reference`` (asserted in
+    tests/test_fast_path.py): both scan candidates in ascending machine-id
+    order, so latency ties — including the all-inf ties of unreachable
+    candidates in blocked topologies — break identically."""
+    ids = list(ids)
+    k = len(ids)
+    if k <= 2:
+        return ids
+    idx = np.asarray(ids)
+    sub = graph.latency[np.ix_(idx, idx)].copy()
+    sub[sub <= 0] = np.inf
+    # start at the node with the best total connectivity; row sums use the
+    # same float dtype/order as the reference's np.nansum over lat[i, ids]
+    start_scores = np.where(np.isinf(sub), 1e12, sub).sum(axis=1)
+    cur = int(np.argmin(start_scores))        # first minimum == min() over ids
+    # free positions kept in ascending machine-id order (reference tie-break)
+    by_id = np.argsort(idx, kind="stable")
+    free = np.ones(k, bool)
+    free[cur] = False
+    order = [int(idx[cur])]
+    for _ in range(k - 1):
+        cand = by_id[free[by_id]]
+        nxt = int(cand[int(np.argmin(sub[cur, cand]))])
+        order.append(int(idx[nxt]))
+        free[nxt] = False
+        cur = nxt
+    return order
+
+
+def greedy_chain_order_reference(graph: ClusterGraph,
+                                 ids: Sequence[int]) -> list[int]:
+    """The historical Python-loop implementation, kept as the readable
+    reference the equivalence test compares against. One deliberate change
+    from the original: candidates iterate in sorted id order (the original
+    iterated a ``set``, whose order for hash-colliding ids is an accident of
+    CPython's table size — i.e. the tie-break between equally-distant or
+    equally-unreachable candidates was unspecified). Ties now break to the
+    smallest machine id, the same rule the vectorized path uses."""
     ids = list(ids)
     if len(ids) <= 2:
         return ids
@@ -234,7 +276,7 @@ def greedy_chain_order(graph: ClusterGraph, ids: Sequence[int]) -> list[int]:
     order = [cur]
     remaining.remove(cur)
     while remaining:
-        nxt = min(remaining, key=lambda j: lat[cur, j])
+        nxt = min(sorted(remaining), key=lambda j: lat[cur, j])
         order.append(nxt)
         remaining.remove(nxt)
         cur = nxt

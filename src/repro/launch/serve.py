@@ -21,13 +21,22 @@ from repro.training.train_step import make_decode_step, make_prefill
 
 def serve_batch(cfg, params, batch: dict, gen_tokens: int, log=print):
     """Prefill the prompt batch, then greedy-decode gen_tokens. Returns
-    (generated (B, gen), tokens/s)."""
+    (generated (B, gen), stats dict).
+
+    The decode step donates its KV-cache argument, so every step writes the
+    new token into the prefill-time allocation instead of allocating a fresh
+    cache pytree per token (the caches dominate serving memory:
+    B x max_len x layers). ``stats`` is machine-readable so harnesses
+    (benchmarks/serve_bench.py) can calibrate simulated replica costs from a
+    real measured decode rate instead of parsing log lines."""
     if jax.default_backend() == "tpu":
         from repro.models import common as cc
         cc.RUNTIME["use_flash"] = True   # Pallas flash/decode kernels
     api = get_api(cfg)
     prefill_fn = make_prefill(cfg, api)
-    decode_fn = jax.jit(make_decode_step(cfg, api))
+    # donate the cache pytree (argnum 3): decode_step's dynamic-update-slice
+    # then updates the caches in place, reusing the allocation across steps
+    decode_fn = jax.jit(make_decode_step(cfg, api), donate_argnums=(3,))
     b, s = batch["tokens"].shape
     extra = cfg.n_patches if cfg.family == "vlm" else 0
     max_len = extra + s + gen_tokens
@@ -36,6 +45,7 @@ def serve_batch(cfg, params, batch: dict, gen_tokens: int, log=print):
     last_logits, caches = jax.jit(prefill_fn, static_argnums=(2,))(
         params, batch, max_len)
     token = jnp.argmax(last_logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(token)
     t_prefill = time.time() - t0
 
     out = [token]
@@ -47,10 +57,25 @@ def serve_batch(cfg, params, batch: dict, gen_tokens: int, log=print):
     jax.block_until_ready(token)
     t_decode = time.time() - t0
     gen = jnp.concatenate(out, axis=1)
-    tps = b * (gen_tokens - 1) / max(t_decode, 1e-9)
+    decode_steps = gen_tokens - 1
+    stats = {
+        "batch": b,
+        "prompt_tokens": s,
+        "gen_tokens": gen_tokens,
+        "prefill_s": t_prefill,
+        "prefill_tokens": b * s,
+        "prefill_tokens_per_s": b * s / max(t_prefill, 1e-9),
+        "decode_s": t_decode,
+        "decode_steps": decode_steps,
+        "decode_tokens": b * decode_steps,
+        "tokens_per_s": b * decode_steps / max(t_decode, 1e-9),
+        "decode_s_per_token": (t_decode / max(b * decode_steps, 1)),
+        "backend": jax.default_backend(),
+    }
     log(f"prefill {s} toks x{b}: {t_prefill:.2f}s; "
-        f"decode {gen_tokens - 1} steps: {t_decode:.2f}s ({tps:.1f} tok/s)")
-    return np.asarray(gen), tps
+        f"decode {decode_steps} steps: {t_decode:.2f}s "
+        f"({stats['tokens_per_s']:.1f} tok/s)")
+    return np.asarray(gen), stats
 
 
 def main(argv=None):
@@ -73,8 +98,9 @@ def main(argv=None):
         cfg, SyntheticConfig(global_batch=args.batch,
                              seq_len=args.prompt_len,
                              seed=args.seed), 0).items()}
-    gen, tps = serve_batch(cfg, params, batch, args.gen)
+    gen, stats = serve_batch(cfg, params, batch, args.gen)
     print(f"generated shape {gen.shape}; sample row: {gen[0][:8].tolist()}")
+    print("stats: " + " ".join(f"{k}={v}" for k, v in stats.items()))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,206 @@
+"""Continuous-batching replica model (vLLM/aphrodite-style mechanics).
+
+A ``Replica`` owns one machine of the ``ClusterGraph`` and runs an iteration
+loop over the discrete-event engine:
+
+* an **admission queue** holds routed requests until there is both a batch
+  slot and KV room; KV is reserved for the whole sequence (prompt + max
+  generation) at admission, so a sequence admitted once can never be
+  preempted by memory pressure — the conservative reservation real engines
+  use when they disable swapping;
+* each **iteration** interleaves prefill and decode: sequences still
+  prefilling contribute a chunk of prompt tokens (chunked prefill), every
+  decoded sequence contributes exactly one token. The iteration's duration
+  is the efficiency-adjusted FLOPs priced by ``serve.costs`` divided through
+  the machine's FLOP/s — i.e. ``sim.compute.ComputeModel.duration``, so
+  straggler/jitter modeling applies to serving for free;
+* completions free their KV reservation and fire the router's callback
+  (which moves the response back over the network).
+
+Calibration contract (asserted in tests/test_serve.py): with zero jitter and
+an idle network, a request's time inside the replica is exactly
+``ServeModel.service_s(prompt, gen, tflops)`` — chunking only splits the
+work across iterations, it never adds any.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Optional
+
+from repro.serve.costs import ServeModel
+from repro.serve.traffic import Request
+from repro.sim.compute import ComputeModel
+from repro.sim.engine import Event, Simulator
+
+# keeps replica-iteration jitter streams disjoint from the training tags
+_TAG_SERVE = 4
+
+
+@dataclasses.dataclass
+class Seq:
+    """One admitted request's in-flight decoding state."""
+    req: Request
+    done_cb: Callable[["Seq"], None]
+    t_enqueue: float
+    prefill_remaining: int = 0
+    decode_remaining: int = 0
+    t_admit: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def kv_tokens(self) -> int:
+        return self.req.total_tokens
+
+
+class Replica:
+    def __init__(self, sim: Simulator, compute: ComputeModel, machine_id: int,
+                 model: ServeModel, memory_gb: float, *, max_batch: int = 8,
+                 prefill_chunk: int = 256, name: str | None = None):
+        self.sim = sim
+        self.compute = compute
+        self.machine = int(machine_id)
+        self.model = model
+        self.name = name or f"replica@{machine_id}"
+        self.max_batch = max_batch
+        self.prefill_chunk = prefill_chunk
+        self.kv_capacity = model.kv_capacity_tokens(memory_gb)
+        self.kv_used = 0
+        self.queue: collections.deque[Seq] = collections.deque()
+        self.running: list[Seq] = []
+        self.alive = True
+        self.accepting = True           # False while draining
+        self.it = 0                     # iteration counter (jitter key)
+        self.busy_s = 0.0
+        self.tokens_decoded = 0
+        self.tokens_prefilled = 0
+        self.batch_occupancy: float = 0.0   # time-integral of batch size
+        self._iter_ev: Optional[Event] = None
+
+    # -- queries -------------------------------------------------------------
+    def fits(self, req: Request) -> bool:
+        """Can this replica EVER hold the request? (KV reservation bound)"""
+        return req.total_tokens <= self.kv_capacity
+
+    def n_pending(self) -> int:
+        return len(self.queue) + len(self.running)
+
+    def backlog_work(self) -> float:
+        """Effective FLOPs of everything queued or in flight — the router's
+        load signal."""
+        w = 0.0
+        for s in self.queue:
+            w += self.model.service_work(s.req.prompt_tokens,
+                                         s.req.gen_tokens)
+        for s in self.running:
+            w += self.model.prefill_work(s.prefill_remaining) \
+                + self.model.decode_work(s.decode_remaining)
+        return w
+
+    def est_wait_s(self) -> float:
+        tf = float(self.compute.tflops[self.machine]) * 1e12
+        return self.backlog_work() / tf
+
+    # -- request flow --------------------------------------------------------
+    def submit(self, req: Request, done_cb: Callable[[Seq], None]) -> Seq:
+        assert self.alive and self.accepting
+        seq = Seq(req=req, done_cb=done_cb, t_enqueue=self.sim.now,
+                  prefill_remaining=req.prompt_tokens,
+                  decode_remaining=req.gen_tokens)
+        self.queue.append(seq)
+        self._maybe_iterate()
+        return seq
+
+    def _admit(self) -> None:
+        while (self.queue and len(self.running) < self.max_batch
+               and self.kv_used + self.queue[0].kv_tokens
+               <= self.kv_capacity):
+            seq = self.queue.popleft()
+            seq.t_admit = self.sim.now
+            self.kv_used += seq.kv_tokens
+            self.running.append(seq)
+
+    def _maybe_iterate(self) -> None:
+        if not self.alive or self._iter_ev is not None:
+            return
+        self._admit()
+        if not self.running:
+            return
+        work = 0.0
+        for s in self.running:
+            if s.prefill_remaining > 0:
+                work += self.model.prefill_work(
+                    min(self.prefill_chunk, s.prefill_remaining))
+            else:
+                work += self.model.decode_work(1)
+        dur = self.compute.duration(self.machine, work, step=self.it,
+                                    microbatch=0, tag=_TAG_SERVE)
+        self.busy_s += dur
+        self.batch_occupancy += dur * len(self.running)
+        self._iter_ev = self.sim.schedule(dur, self._finish_iteration)
+
+    def _finish_iteration(self) -> None:
+        self._iter_ev = None
+        if not self.alive:
+            return
+        self.it += 1
+        done: list[Seq] = []
+        for s in self.running:
+            if s.prefill_remaining > 0:
+                chunk = min(self.prefill_chunk, s.prefill_remaining)
+                s.prefill_remaining -= chunk
+                self.tokens_prefilled += chunk
+            else:
+                s.decode_remaining -= 1
+                self.tokens_decoded += 1
+                if s.t_first_token is None:
+                    s.t_first_token = self.sim.now
+                if s.decode_remaining == 0:
+                    done.append(s)
+        for s in done:
+            self.running.remove(s)
+            self.kv_used -= s.kv_tokens
+            s.t_done = self.sim.now
+        self._maybe_iterate()
+        # callbacks last: they may route new work back into this replica
+        for s in done:
+            s.done_cb(s)
+
+    # -- lifecycle -----------------------------------------------------------
+    def drain(self) -> list[Request]:
+        """Stop admitting; return the not-yet-admitted requests so the
+        router can place them elsewhere. In-flight sequences finish."""
+        self.accepting = False
+        dropped = [s.req for s in self.queue]
+        self.queue.clear()
+        return dropped
+
+    def fail(self) -> list[Request]:
+        """Machine died: every queued AND in-flight request is interrupted
+        and handed back for re-routing (generation restarts from scratch —
+        no cross-replica KV migration yet)."""
+        self.alive = False
+        self.accepting = False
+        if self._iter_ev is not None:
+            self._iter_ev.cancel()
+            self._iter_ev = None
+        interrupted = [s.req for s in self.queue] \
+            + [s.req for s in self.running]
+        self.queue.clear()
+        self.running.clear()
+        self.kv_used = 0
+        return interrupted
+
+    def stats(self) -> dict:
+        return {
+            "machine": self.machine,
+            "busy_s": self.busy_s,
+            "iterations": self.it,
+            "tokens_decoded": self.tokens_decoded,
+            "tokens_prefilled": self.tokens_prefilled,
+            "mean_batch": (self.batch_occupancy / self.busy_s
+                           if self.busy_s > 0 else 0.0),
+            "kv_capacity_tokens": self.kv_capacity,
+            "alive": self.alive,
+        }

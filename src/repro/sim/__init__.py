@@ -18,11 +18,17 @@ from repro.sim.evaluate import (FleetSimulation, SimResult, comparison_table,
                                 evaluate_all, evaluate_scenario,
                                 simulate_single)
 from repro.sim.network import NetworkModel
-from repro.sim.scenarios import SCENARIOS, Scenario, get_scenario, register
+from repro.sim.scenarios import (SCENARIOS, SERVE_SCENARIOS, Scenario,
+                                 ServeScenario, get_scenario,
+                                 get_serve_scenario, register,
+                                 register_serve)
+from repro.sim.workload import ServeExecutor
 
 __all__ = [
     "Simulator", "NetworkModel", "ComputeModel", "JitterConfig",
     "Scenario", "SCENARIOS", "register", "get_scenario",
+    "ServeScenario", "SERVE_SCENARIOS", "register_serve",
+    "get_serve_scenario", "ServeExecutor",
     "FleetSimulation", "SimResult", "simulate_single",
     "evaluate_scenario", "evaluate_all", "comparison_table",
 ]

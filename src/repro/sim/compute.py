@@ -48,6 +48,15 @@ class ComputeModel:
     def stragglers(self) -> list[int]:
         return [int(i) for i in np.nonzero(self.slow_factor > 1.0)[0]]
 
+    def add_machine(self, machine) -> int:
+        """The fleet grew (autoscale provisioning): track the new machine.
+        Joined machines are never retroactive stragglers — the straggler
+        draw stays a pure function of the initial fleet and seed."""
+        self.tflops = np.append(self.tflops, np.float32(machine.tflops))
+        self.slow_factor = np.append(self.slow_factor, 1.0)
+        self.busy_s = np.append(self.busy_s, 0.0)
+        return len(self.tflops) - 1
+
     def duration(self, machine: int, work_flops: float, step: int = 0,
                  microbatch: int = 0, tag: int = 0) -> float:
         base = work_flops / (float(self.tflops[machine]) * 1e12)

@@ -365,7 +365,9 @@ def trained_gnn(tasks: Sequence[cm.ModelTask], seed: int = 0):
         cfg = gnn_train.gnn_config_for(tasks)
         ds = gnn_train.make_dataset(3, tasks, n_nodes=12, seed=seed + 11,
                                     label_frac=0.8)
-        params, _ = gnn_train.train_gnn(cfg, ds, steps=15, lr=0.01, seed=seed)
+        # default joint mode: one update/epoch over 3 graphs (~3x the old
+        # sequential epoch count)
+        params, _ = gnn_train.train_gnn(cfg, ds, steps=50, lr=0.01, seed=seed)
         _GNN_CACHE[key] = (params, cfg)
     return _GNN_CACHE[key]
 

@@ -92,19 +92,7 @@ class NetworkModel:
         self.graph = graph
         self.comm_model = comm_model
         self.capacity_scale = capacity_scale
-        self.routed_ms, self.paths = _paths(graph.latency)
-        n = graph.n
-        # Per-link capacity from the *direct* latency; end-to-end ceiling from
-        # the *routed* latency (see module docstring for why this calibrates).
-        self.link_bw = np.zeros((n, n))
-        self.e2e_bw = np.zeros((n, n))
-        for bw, lat_ms in ((self.link_bw, graph.latency),
-                           (self.e2e_bw, self.routed_ms)):
-            for i in range(n):
-                for j in range(n):
-                    lat = float(lat_ms[i, j])
-                    if i != j and lat > 0:
-                        bw[i, j] = cm.link_bandwidth(lat, comm_model)
+        self._rebuild_topology(graph)
         self._active: list[_Flow] = []
         self._tick_ev: Optional[Event] = None
         self.bytes_moved: float = 0.0
@@ -206,6 +194,34 @@ class NetworkModel:
         if flow in self._active:
             self._active.remove(flow)
         flow.done_cb()
+
+    def _rebuild_topology(self, graph: ClusterGraph) -> None:
+        """Routed paths + bandwidth tables for ``graph``. Per-link capacity
+        comes from the *direct* latency; the end-to-end ceiling from the
+        *routed* latency (see module docstring for why this calibrates)."""
+        self.routed_ms, self.paths = _paths(graph.latency)
+        n = graph.n
+        self.link_bw = np.zeros((n, n))
+        self.e2e_bw = np.zeros((n, n))
+        for bw, lat_ms in ((self.link_bw, graph.latency),
+                           (self.e2e_bw, self.routed_ms)):
+            for i in range(n):
+                for j in range(n):
+                    lat = float(lat_ms[i, j])
+                    if i != j and lat > 0:
+                        bw[i, j] = cm.link_bandwidth(lat, self.comm_model)
+
+    # -- elasticity ----------------------------------------------------------
+    def add_machine(self, graph: ClusterGraph) -> None:
+        """The fleet grew (autoscale provisioning): adopt the (n+1)-node
+        graph. Active flows keep their routes and caps — their links are
+        (old_i, old_j) pairs whose capacities are unchanged — while new
+        transfers see the extended topology. O(n^3) path recompute; joins
+        are rare control-plane events."""
+        if graph.n < self.graph.n:
+            raise ValueError("add_machine cannot shrink the fleet")
+        self.graph = graph
+        self._rebuild_topology(graph)
 
     # -- lifecycle -----------------------------------------------------------
     def reset(self) -> None:

@@ -171,3 +171,155 @@ register(Scenario(
     description="Policy-blocked links force China<->Europe traffic to relay "
                 "through London; the relay hub becomes a contended resource.",
     fleet=blocked_fleet))
+
+
+# ---------------------------------------------------------------------------
+# Serving scenarios (PR 3): request traffic against replica fleets. Kept in
+# a separate registry from the training scenarios — ``evaluate_all`` and the
+# training-scenario tests iterate ``SCENARIOS``; serving runs go through
+# ``serve.evaluate.evaluate_serve_scenario``.
+# ---------------------------------------------------------------------------
+def _serve_imports():
+    from repro.serve.autoscale import AutoscaleConfig
+    from repro.serve.costs import serve_model_from_task
+    from repro.serve.traffic import ModelMix, TrafficConfig
+    return AutoscaleConfig, serve_model_from_task, ModelMix, TrafficConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeScenario:
+    name: str
+    description: str
+    fleet: Callable[[int], "ClusterGraph"]
+    traffic: Callable[["ClusterGraph"], "object"]   # graph -> TrafficConfig
+    model: "object"                                 # serve.costs.ServeModel
+    n_replicas: int = 3
+    max_batch: int = 8
+    prefill_chunk: int = 256
+    slo_s: float = 20.0
+    comm_model: str = "alphabeta"
+    jitter: JitterConfig = JitterConfig()
+    autoscale: Optional[object] = None              # AutoscaleConfig
+    spares: tuple = ()                              # Machines to provision
+    fault_fracs: tuple[float, ...] = ()
+    kills_per_fault: int = 1
+
+
+SERVE_SCENARIOS: dict[str, ServeScenario] = {}
+
+
+def register_serve(scenario: ServeScenario) -> ServeScenario:
+    if scenario.name in SERVE_SCENARIOS:
+        raise ValueError(f"serve scenario {scenario.name!r} already "
+                         "registered")
+    SERVE_SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_serve_scenario(name: str) -> ServeScenario:
+    try:
+        return SERVE_SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown serve scenario {name!r}; "
+                       f"known: {sorted(SERVE_SCENARIOS)}") from None
+
+
+def _regions_of(graph) -> tuple[str, ...]:
+    seen: list[str] = []
+    for m in graph.machines:
+        if m.region not in seen:
+            seen.append(m.region)
+    return tuple(seen)
+
+
+def _default_serve_model():
+    _, from_task, _, _ = _serve_imports()
+    # 34B chat model at interactive decode efficiency (~1% MFU: small-batch
+    # decode is weight-streaming-bound): per-replica throughput lands at
+    # tens-to-hundreds of tokens/s, so a handful of rps of request traffic
+    # genuinely contends for replica capacity — the regime where routing
+    # and placement quality decide the latency tail.
+    task = cm.ModelTask("Chat-34B", 34e9, 60, 7168)
+    return from_task(task, name="chat-34b", decode_efficiency=0.01)
+
+
+_SERVE_MODEL = _default_serve_model()
+_SERVE_HORIZON_S = 300.0
+
+
+def _serve_mix():
+    _, _, ModelMix, _ = _serve_imports()
+    return (ModelMix(_SERVE_MODEL.name, prompt_median=128.0,
+                     gen_median=48.0),)
+
+
+def _diurnal_serve_traffic(graph):
+    _, _, _, TrafficConfig = _serve_imports()
+    return TrafficConfig(
+        rate_rps=7.0, horizon_s=_SERVE_HORIZON_S,
+        regions=_regions_of(graph), mixes=_serve_mix(),
+        diurnal_depth=0.85)
+
+
+def _burst_serve_traffic(graph):
+    _, _, _, TrafficConfig = _serve_imports()
+    return TrafficConfig(
+        rate_rps=5.0, horizon_s=_SERVE_HORIZON_S,
+        regions=_regions_of(graph), mixes=_serve_mix(),
+        burst_factor=6.0,
+        burst_window=(0.35 * _SERVE_HORIZON_S, 0.55 * _SERVE_HORIZON_S),
+        burst_region="Beijing")
+
+
+def _failure_serve_traffic(graph):
+    _, _, _, TrafficConfig = _serve_imports()
+    return TrafficConfig(
+        rate_rps=5.0, horizon_s=_SERVE_HORIZON_S,
+        regions=_regions_of(graph), mixes=_serve_mix())
+
+
+def _serve_autoscale():
+    AutoscaleConfig, _, _, _ = _serve_imports()
+    return AutoscaleConfig(check_period_s=15.0, queue_high=3.0,
+                           queue_low=0.2, slo_s=None, min_replicas=2,
+                           max_replicas=5, cooldown_s=45.0)
+
+
+register_serve(ServeScenario(
+    name="serve_diurnal",
+    description="Follow-the-sun: request load peaks region by region with "
+                "local daytime while diurnal background traffic squeezes "
+                "the same links; nearest-replica routing melts whichever "
+                "replica the sun is over.",
+    fleet=paper_fig1_graph,
+    traffic=_diurnal_serve_traffic,
+    model=_SERVE_MODEL,
+    n_replicas=3,
+    slo_s=20.0,
+    autoscale=_serve_autoscale()))
+
+register_serve(ServeScenario(
+    name="serve_regional_burst",
+    description="Flat global load with a 6x request burst from Beijing for "
+                "20% of the run — load-aware policies shed the spike across "
+                "the fleet, nearest routing queues it on one replica.",
+    fleet=paper_fig1_graph,
+    traffic=_burst_serve_traffic,
+    model=_SERVE_MODEL,
+    n_replicas=3,
+    slo_s=20.0,
+    autoscale=_serve_autoscale()))
+
+register_serve(ServeScenario(
+    name="serve_replica_failure",
+    description="Steady load; at 40% of the run one serving replica dies. "
+                "Interrupted requests re-route and restart, and the "
+                "autoscaler back-fills capacity (cold-start weight "
+                "transfer included).",
+    fleet=lambda seed: lan_fleet(seed, n=8),
+    traffic=_failure_serve_traffic,
+    model=_SERVE_MODEL,
+    n_replicas=3,
+    slo_s=15.0,
+    autoscale=_serve_autoscale(),
+    fault_fracs=(0.4,)))

@@ -1,9 +1,9 @@
-"""Step executors: one event DAG per parallelism strategy.
+"""Step executors: training-step event DAGs + the serving request executor.
 
-Each executor simulates ONE training step of a task on its machine group and
-reports ``done_cb(compute_phase_s, comm_phase_s)``. The DAG shapes are chosen
-so that, with zero jitter and no competing traffic, the simulated step time
-equals the analytic ``core.cost_model`` prediction *exactly*:
+Training: each executor simulates ONE training step of a task on its machine
+group and reports ``done_cb(compute_phase_s, comm_phase_s)``. The DAG shapes
+are chosen so that, with zero jitter and no competing traffic, the simulated
+step time equals the analytic ``core.cost_model`` prediction *exactly*:
 
 * ``gpipe`` — an (S stages x M microbatches) wavefront where every op takes
   ``T_c / M`` (stage sizes are proportional to machine compute, so per-stage
@@ -22,16 +22,31 @@ equals the analytic ``core.cost_model`` prediction *exactly*:
 Under contention (shared links, relay hubs), stragglers (compute jitter) and
 re-plans these DAGs diverge from the closed form — that divergence is the
 quantity the simulator exists to measure.
+
+Serving (``ServeExecutor``): requests from ``serve.traffic`` flow as
+first-class events — arrival at the region's entry node, a routed network
+transfer of the prompt, continuous-batching iterations on a
+``serve.replica.Replica``, the response transfer back — so serving latency
+inherits every fleet effect the training DAGs see (fair-share link
+contention, relay hubs, stragglers, diurnal capacity squeeze). Replica
+failures re-route interrupted requests; the ``serve.autoscale`` controller
+scales the replica set, provisioning spare machines into the live graph
+(``NetworkModel.add_machine`` / ``ComputeModel.add_machine``) with a
+cold-start weight transfer from the nearest live replica, and — under the
+Hulk policy — re-planning placement through
+``runtime.elastic.ElasticRuntime.on_join``.
 """
 from __future__ import annotations
 
-from typing import Callable, Sequence
+import collections
+import dataclasses
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from repro.core import cost_model as cm
-from repro.core.graph import ClusterGraph
-from repro.sim.compute import ComputeModel
+from repro.core.graph import ClusterGraph, Machine
+from repro.sim.compute import ComputeModel, JitterConfig
 from repro.sim.engine import Barrier, Simulator
 from repro.sim.network import NetworkModel
 
@@ -196,3 +211,266 @@ def _tp_step(sim, net, compute, graph, task, ids, step, done_cb):
         work = task.flops_per_step * (float(tf[i]) / total_tf)
         sim.schedule(compute.duration(i, work, step, 0, _TAG_TP),
                      barrier.arrive)
+
+
+# ---------------------------------------------------------------------------
+# Serving executor: requests as first-class events
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RequestRecord:
+    """End-to-end bookkeeping for one request."""
+    req: "object"                       # serve.traffic.Request
+    t_complete: Optional[float] = None
+    latency_s: Optional[float] = None
+    t_first_token: Optional[float] = None
+    n_routes: int = 0
+    dropped: bool = False
+    machines: list = dataclasses.field(default_factory=list)
+
+
+class ServeExecutor:
+    """Drive one routing policy through one serving workload.
+
+    Construction wires the placement (static for the baseline policies,
+    ``serve.router.HulkPlacement`` for ``policy="hulk"``), the router, the
+    replica set, the optional autoscaler and the fault schedule; ``run()``
+    returns the records plus infrastructure stats for
+    ``serve.evaluate.summarize``.
+    """
+
+    MAX_ROUTES = 5       # re-route attempts before a request is dropped
+
+    def __init__(self, graph: ClusterGraph, model, trace: Sequence,
+                 policy: str, *, params=None, cfg=None,
+                 comm_model: str = "alphabeta",
+                 jitter: Optional[JitterConfig] = None,
+                 n_replicas: int = 2, max_batch: int = 8,
+                 prefill_chunk: int = 256,
+                 autoscale=None, spares: Sequence[Machine] = (),
+                 fault_fracs: Sequence[float] = (), kills_per_fault: int = 1,
+                 seed: int = 0, run_until_s: Optional[float] = None):
+        from repro.serve.autoscale import Autoscaler
+        from repro.serve.replica import Replica
+        from repro.serve.router import HulkPlacement, Router, StaticPlacement
+
+        self.graph = graph
+        self.model = model
+        self.trace = list(trace)
+        self.policy = policy
+        self.seed = seed
+        self.max_batch = max_batch
+        self.prefill_chunk = prefill_chunk
+        self.kills_per_fault = kills_per_fault
+        self._Replica = Replica
+
+        self.sim = Simulator()
+        self.net = NetworkModel(graph, comm_model)
+        self.compute = ComputeModel(graph, jitter, seed=seed)
+
+        if policy == "hulk":
+            if params is None or cfg is None:
+                raise ValueError("hulk policy needs trained GNN (params, cfg)")
+            self.placement = HulkPlacement(graph, model, n_replicas, params,
+                                           cfg)
+        else:
+            self.placement = StaticPlacement(graph, model, n_replicas)
+        self.router = Router(policy, graph, self.net,
+                             scores=getattr(self.placement, "scores", None))
+
+        self.replicas: dict[int, Replica] = {}
+        self.retired: list[Replica] = []
+        for mid in self.placement.desired():
+            self._add_replica(mid)
+
+        self.records = {r.rid: RequestRecord(req=r) for r in self.trace}
+        self.horizon = (max(r.t_arrival for r in self.trace)
+                        if self.trace else 0.0)
+        self.run_until = (run_until_s if run_until_s is not None
+                          else 8.0 * max(self.horizon, 1.0) + 600.0)
+        self.fault_fracs = tuple(fault_fracs)
+        self.scale_log: list[dict] = []
+        self._spares = collections.deque(spares)
+
+        # machines whose cold-start weight transfer is still in flight —
+        # they count against the autoscaler's replica cap (else every tick
+        # past the cooldown re-provisions while slow WAN transfers run) and
+        # a scale-down can abort them before they open
+        self._provisioning: set[int] = set()
+        self._cancelled_starts: set[int] = set()
+
+        self.autoscaler = None
+        if autoscale is not None:
+            self.autoscaler = Autoscaler(
+                self.sim, autoscale,
+                n_replicas=lambda: (sum(r.alive for r in
+                                        self.replicas.values())
+                                    + len(self._provisioning)),
+                pending_per_replica=self._pending_per_replica,
+                scale_up=self._scale_up, scale_down=self._scale_down)
+
+    # -- replica lifecycle ---------------------------------------------------
+    def _add_replica(self, mid: int) -> None:
+        mem = float(self.graph.memory_gb()[mid])
+        self.replicas[mid] = self._Replica(
+            self.sim, self.compute, mid, self.model, mem,
+            max_batch=self.max_batch, prefill_chunk=self.prefill_chunk)
+
+    def _cold_start(self, mid: int) -> None:
+        """Weights stream from the nearest live replica (or appear instantly
+        when this is the very first one), then the replica opens — unless a
+        scale-down cancelled the start while the transfer was in flight."""
+        peers = [m for m, r in self.replicas.items() if r.alive]
+        src = min(peers, key=lambda m: float(self.net.routed_ms[m, mid])) \
+            if peers else mid
+        self._provisioning.add(mid)
+
+        def up() -> None:
+            self._provisioning.discard(mid)
+            if mid in self._cancelled_starts:
+                self._cancelled_starts.discard(mid)
+                self.scale_log.append({"t": self.sim.now,
+                                       "event": "replica_start_aborted",
+                                       "machine": mid})
+                return
+            old = self.replicas.get(mid)
+            if old is not None:
+                self.retired.append(old)
+            self._add_replica(mid)
+            self.scale_log.append({"t": self.sim.now, "event": "replica_up",
+                                   "machine": mid})
+        self.net.transfer(self.sim, src, mid, self.model.weight_bytes, up)
+
+    def _pending_per_replica(self) -> float:
+        alive = [r for r in self.replicas.values() if r.alive]
+        if not alive:
+            return float("inf")
+        return sum(r.n_pending() for r in alive) / len(alive)
+
+    def _scale_up(self) -> bool:
+        mid = self.placement.acquire()
+        if mid is None and self._spares:
+            machine = self._spares.popleft()
+            self.graph = self.graph.add_machine(machine)
+            self.net.add_machine(self.graph)
+            self.compute.add_machine(machine)
+            mid = self.placement.on_machine_joined(machine, self.graph)
+            self.router.graph = self.graph
+            self.router.scores = getattr(self.placement, "scores", None)
+            self.scale_log.append({"t": self.sim.now, "event": "join",
+                                   "machine": mid, "region": machine.region})
+        if mid is None:
+            return False
+        self._cold_start(mid)
+        return True
+
+    def _scale_down(self) -> bool:
+        mid = self.placement.release()
+        if mid is None:
+            return False
+        rep = self.replicas.pop(mid, None)
+        if rep is None:
+            if mid in self._provisioning:
+                # released while its weights were still streaming: abort
+                # the start (the machine already left placement.active, so
+                # nothing goes orphaned)
+                self._cancelled_starts.add(mid)
+                return True
+            return False
+        self.retired.append(rep)
+        self.scale_log.append({"t": self.sim.now, "event": "replica_down",
+                               "machine": mid})
+        for req in rep.drain():
+            self._route(req)
+        return True
+
+    # -- faults --------------------------------------------------------------
+    def _fire_fault(self, k: int) -> None:
+        alive = sorted(m for m, r in self.replicas.items() if r.alive)
+        if len(alive) <= 1:
+            return
+        rng = np.random.default_rng((self.seed, 0xFA17, k))
+        kills = min(self.kills_per_fault, len(alive) - 1)
+        victims = sorted(int(v) for v in
+                         rng.choice(alive, size=kills, replace=False))
+        interrupted = []
+        for v in victims:
+            rep = self.replicas.pop(v)
+            interrupted.extend(rep.fail())
+            self.retired.append(rep)
+            self.placement.on_machine_failed(v)
+            self.scale_log.append({"t": self.sim.now,
+                                   "event": "replica_failed", "machine": v})
+        for req in interrupted:
+            self._route(req)
+
+    # -- request flow --------------------------------------------------------
+    def _on_arrival(self, req) -> None:
+        self._route(req)
+
+    def _route(self, req) -> None:
+        rec = self.records[req.rid]
+        if rec.dropped or rec.t_complete is not None:
+            return
+        if rec.n_routes >= self.MAX_ROUTES:
+            rec.dropped = True
+            return
+        rep = self.router.pick(req, list(self.replicas.values()))
+        if rep is None:
+            rec.dropped = True
+            return
+        rec.n_routes += 1
+        rec.machines.append(rep.machine)
+        src = self.router.entry(req.region)
+        nbytes = req.prompt_tokens * self.model.request_bytes_per_token
+        self.net.transfer(self.sim, src, rep.machine, nbytes,
+                          lambda: self._deliver(req, rep))
+
+    def _deliver(self, req, rep) -> None:
+        if not (rep.alive and rep.accepting):
+            self._route(req)      # died/drained while the prompt was in flight
+            return
+        rep.submit(req, lambda seq, m=rep.machine: self._on_served(seq, m))
+
+    def _on_served(self, seq, machine: int) -> None:
+        req = seq.req
+        dst = self.router.entry(req.region)
+        nbytes = req.gen_tokens * self.model.response_bytes_per_token
+        self.net.transfer(self.sim, machine, dst,
+                          nbytes, lambda: self._complete(req, seq))
+
+    def _complete(self, req, seq) -> None:
+        rec = self.records[req.rid]
+        rec.t_complete = self.sim.now
+        rec.latency_s = self.sim.now - req.t_arrival
+        rec.t_first_token = seq.t_first_token
+        if self.autoscaler is not None and rec.latency_s is not None:
+            self.autoscaler.observe_completion(rec.latency_s)
+
+    # -- entry point ---------------------------------------------------------
+    def run(self) -> dict:
+        for req in self.trace:
+            self.sim.schedule(req.t_arrival, self._on_arrival, req,
+                              pin_epoch=False)
+        for k, frac in enumerate(self.fault_fracs):
+            self.sim.schedule(frac * max(self.horizon, 1.0),
+                              self._fire_fault, k, pin_epoch=False)
+        if self.autoscaler is not None:
+            self.autoscaler.start()
+        self.sim.run(until=self.run_until)
+        if self.autoscaler is not None:
+            self.autoscaler.stop()
+        all_reps = list(self.replicas.values()) + self.retired
+        return {
+            "policy": self.policy,
+            "records": self.records,
+            "horizon_s": self.horizon,
+            "end_s": self.sim.now,
+            "n_events": self.sim.n_fired,
+            "bytes_moved": self.net.bytes_moved,
+            "replicas": [r.stats() for r in all_reps],
+            "scale_log": list(self.scale_log),
+            "autoscale_log": (list(self.autoscaler.log)
+                              if self.autoscaler else []),
+            "final_replicas": sorted(m for m, r in self.replicas.items()
+                                     if r.alive),
+        }

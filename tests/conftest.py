@@ -30,10 +30,12 @@ def fleet46():
 @pytest.fixture(scope="session")
 def trained_gnn(fleet46, four_tasks):
     """GNN trained once per test session on the 46-node fleet + 4 random
-    fleets (matches the benchmark configuration)."""
+    fleets (matches the benchmark configuration). The default training mode
+    is ``joint`` (one Adam step per epoch on the mean loss across the 5
+    graphs), so the epoch count is ~5x the old sequential-mode 30."""
     cfg = gnn_train.gnn_config_for(four_tasks)
     ds = gnn_train.make_dataset(4, four_tasks, n_nodes=46, seed=1,
                                 label_frac=0.8)
     ds.append(gnn_train.make_example(fleet46, four_tasks, seed=0))
-    params, hist = gnn_train.train_gnn(cfg, ds, steps=30, lr=0.01)
+    params, hist = gnn_train.train_gnn(cfg, ds, steps=150, lr=0.01)
     return params, cfg, hist

@@ -231,3 +231,49 @@ def test_labeler_matches_reference_bit_identically(n, seed, tasks, fleet_fn):
     ref_l = labels_mod.local_search_reference(g, ref_g, tasks, comm, iters=60,
                                               seed=seed)
     np.testing.assert_array_equal(fast_l, ref_l)
+
+
+# ---------------------------------------------------------------------------
+# vectorized greedy_chain_order
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,seed", [(8, 0), (16, 1), (33, 2), (64, 5)])
+def test_chain_order_matches_reference(n, seed):
+    g = random_fleet(n, seed=seed)
+    ids = list(range(n))
+    assert cm.greedy_chain_order(g, ids) \
+        == cm.greedy_chain_order_reference(g, ids)
+    # non-contiguous, unsorted subsets (how Algorithm 1 groups call it)
+    rng = np.random.default_rng(seed)
+    sub = [int(i) for i in rng.choice(n, size=max(3, n // 2), replace=False)]
+    assert cm.greedy_chain_order(g, sub) \
+        == cm.greedy_chain_order_reference(g, sub)
+
+
+def test_chain_order_handles_blocked_and_tiny_groups():
+    from repro.sim.scenarios import blocked_fleet
+    g = blocked_fleet(seed=0)
+    ids = list(range(g.n))
+    assert cm.greedy_chain_order(g, ids) \
+        == cm.greedy_chain_order_reference(g, ids)
+    assert cm.greedy_chain_order(g, [3]) == [3]
+    assert cm.greedy_chain_order(g, [5, 2]) == [5, 2]
+
+
+def test_chain_order_inf_ties_with_hash_colliding_ids():
+    """Unreachable candidates tie at inf latency; with ids that collide in
+    a CPython set's hash table (e.g. {0, 32, ...}) the original set-order
+    tie-break was unspecified. Both implementations must break such ties to
+    the smallest id."""
+    from repro.core.graph import ClusterGraph
+    base = random_fleet(40, seed=6)
+    lat = base.latency.copy()
+    # three disconnected islands: {0..12}, {13..25}, {26..39}
+    for a in range(40):
+        for b in range(40):
+            if a // 13 != b // 13:
+                lat[a, b] = 0.0
+    g = ClusterGraph(base.machines, lat)
+    for sub in ([0, 7, 32, 33, 39], [5, 2, 34, 0, 32], list(range(40))):
+        fast = cm.greedy_chain_order(g, sub)
+        ref = cm.greedy_chain_order_reference(g, sub)
+        assert fast == ref, (sub, fast, ref)

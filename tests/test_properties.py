@@ -34,7 +34,8 @@ def gnn_small():
     tasks = TASK_SETS[0]
     cfg = gnn_train.gnn_config_for(tasks)
     ds = gnn_train.make_dataset(3, tasks, n_nodes=16, seed=3, label_frac=0.8)
-    params, _ = gnn_train.train_gnn(cfg, ds, steps=15, lr=0.01)
+    # joint default: ~3x the old sequential epoch count (one update/epoch)
+    params, _ = gnn_train.train_gnn(cfg, ds, steps=50, lr=0.01)
     return tasks, params, cfg
 
 

@@ -110,7 +110,8 @@ def runtime():
     fleet = paper_fleet46()
     cfg = gnn_train.gnn_config_for(tasks)
     ds = gnn_train.make_dataset(3, tasks, n_nodes=46, seed=2, label_frac=0.8)
-    params, _ = gnn_train.train_gnn(cfg, ds, steps=20, lr=0.01)
+    # joint default: ~3x the old sequential epoch count (one update/epoch)
+    params, _ = gnn_train.train_gnn(cfg, ds, steps=60, lr=0.01)
     return ElasticRuntime(fleet, tasks, params, cfg)
 
 
@@ -136,3 +137,83 @@ def test_elastic_join(runtime):
     report = runtime.on_join(Machine("Rome", "A100", 8))
     assert runtime.graph.n == n_before + 1
     assert report["event"] == "join"
+
+
+# ---------------------------------------------------------------------------
+# Elastic on_join re-assignment thresholds (exercised by serve.autoscale)
+# ---------------------------------------------------------------------------
+def _join_gnn(tasks, seed=7, steps=60):
+    cfg = gnn_train.gnn_config_for(tasks)
+    ds = gnn_train.make_dataset(2, tasks, n_nodes=12, seed=seed,
+                                label_frac=0.8)
+    params, _ = gnn_train.train_gnn(cfg, ds, steps=steps, lr=0.01)
+    return params, cfg
+
+
+def _lan_fleet_of(machines, seed=0):
+    from repro.core.graph import ClusterGraph, _latency_matrix
+    rng = np.random.default_rng(seed)
+    return ClusterGraph(machines, _latency_matrix(machines, rng))
+
+
+def test_on_join_deferred_task_triggers_reassignment():
+    """Deferred path: OPT-175B needs all five 640 GB machines, so one task
+    must wait; the sixth machine joining re-runs Algorithm 1 and places
+    everything."""
+    tasks = [cm.OPT_175B, cm.BERT_LARGE]
+    params, cfg = _join_gnn(tasks)
+    fleet = _lan_fleet_of([Machine("California", "A100", 8)
+                           for _ in range(5)])
+    rt = ElasticRuntime(fleet, tasks, params, cfg)
+    assert rt.assignment.deferred, "construction should leave a task waiting"
+    report = rt.on_join(Machine("California", "A100", 8))
+    assert report["rebalanced"] is True
+    assert rt.assignment.deferred == []
+    assert rt.state.epoch == 1
+    placed = {n for n in rt.assignment.groups}
+    assert placed == {t.name for t in tasks}
+
+
+def test_on_join_rebalances_on_big_makespan_win():
+    """>10%-win path: a weak two-machine fleet serving GPT-2 gains an A100
+    server; the predicted makespan collapses, so on_join re-assigns."""
+    tasks = [cm.GPT2_1_5B]
+    params, cfg = _join_gnn(tasks, seed=3)
+    fleet = _lan_fleet_of([Machine("California", "GTX1080Ti", 8),
+                           Machine("California", "GTX1080Ti", 8)], seed=1)
+    rt = ElasticRuntime(fleet, tasks, params, cfg)
+    old = rt.makespan()
+    report = rt.on_join(Machine("California", "A100", 8))
+    assert report["rebalanced"] is True
+    assert rt.state.epoch == 1
+    assert rt.makespan() < old * 0.9   # comfortably past the 10% bar
+
+
+def test_on_join_ignores_marginal_machine():
+    """Churn avoidance: a small far-away machine predicts no >10% win, so
+    the assignment is untouched and the node idles in the spare pool."""
+    tasks = [cm.GPT2_1_5B]
+    params, cfg = _join_gnn(tasks, seed=3)
+    fleet = _lan_fleet_of([Machine("California", "GTX1080Ti", 8),
+                           Machine("California", "GTX1080Ti", 8)], seed=1)
+    rt = ElasticRuntime(fleet, tasks, params, cfg)
+    groups_before = {k: list(v) for k, v in rt.assignment.groups.items()}
+    report = rt.on_join(Machine("Brasilia", "TITANXp", 8))
+    assert report["rebalanced"] is False
+    assert rt.state.epoch == 0
+    assert rt.assignment.groups == groups_before
+    assert rt.graph.n == 3             # the machine still joined the graph
+
+
+def test_on_join_threshold_is_respected():
+    """The same big-win join is ignored when the operator demands a 99%
+    improvement before re-assigning — the threshold, not the candidate
+    placement, gates the decision."""
+    tasks = [cm.GPT2_1_5B]
+    params, cfg = _join_gnn(tasks, seed=3)
+    fleet = _lan_fleet_of([Machine("California", "GTX1080Ti", 8),
+                           Machine("California", "GTX1080Ti", 8)], seed=1)
+    rt = ElasticRuntime(fleet, tasks, params, cfg, rebalance_threshold=0.99)
+    report = rt.on_join(Machine("California", "A100", 8))
+    assert report["rebalanced"] is False
+    assert rt.state.epoch == 0
