@@ -1,0 +1,290 @@
+"""Fleet-scale simulator benchmark: fast data plane vs the reference path.
+
+PR 2's plan_bench proved the *planner* scales; this proves the *simulator*
+does. Every cell of the grid — n in {32, 128, 512} machines x {1k, 20k}
+requests for serving, n in {32, 128, 512} for training — runs twice through
+the fast data plane (vectorized dirty-link flow solver, coalesced
+same-timestamp rebalances, O(1) replica backlog scoring) and once through
+the reference path (``sim.network._rebalance_reference``'s O(flows x path)
+per-event loop + the O(queue) per-score backlog sweep), asserting:
+
+* **equivalence** — makespans (training) and p95 latency / completion
+  horizon (serving) match the reference within 1e-6 relative tolerance
+  (observed: bit-identical on every cell);
+* **determinism** — the two fast runs agree exactly (same seed, same
+  metrics, same event count);
+* **speedup** — the fast path is >= 5x faster at the acceptance cell
+  (n=128, 20k requests; observed 32x): deep burst queues make the
+  reference backlog sweep quadratic and heavy cross-region payloads keep
+  hundreds of flows contending, exactly the regime the fast path targets.
+
+The serving workload is a 3x regional burst of 32 KB/token payloads (think
+multimodal prompts) against ``least_loaded`` routing; the training workload
+is three concurrent data-parallel tasks whose parameter-server barriers
+start hundreds of same-timestamp flows (the coalescing worst case for the
+reference path). The reference column is skipped for cells where it would
+run >5 minutes (n=512, 20k requests — marked ``ref_skipped``); the fast
+path still reports throughput there.
+
+``python -m benchmarks.fleet_bench`` writes benchmarks/BENCH_fleet.json;
+``--smoke`` runs a shrunken grid for CI and writes
+benchmarks/BENCH_fleet.smoke.json.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import platform
+import sys
+import time
+
+
+def _sys_path():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_fleet.json")
+SMOKE_OUT = os.path.join(os.path.dirname(__file__), "BENCH_fleet.smoke.json")
+
+SERVE_GRID = ((32, 1_000), (32, 20_000), (128, 1_000), (128, 20_000),
+              (512, 1_000), (512, 20_000))
+TRAIN_GRID = (32, 128, 512)
+# reference at this cell extrapolates past 5 minutes of wall clock; the
+# fast path still runs and reports throughput
+REF_SKIP = {(512, 20_000)}
+ACCEPT_CELL = (128, 20_000)   # >=5x asserted here
+SPEEDUP_FLOOR = 5.0
+EQUIV_RTOL = 1e-6
+HORIZON_S = 300.0
+
+
+# ---------------------------------------------------------------------------
+# Workloads
+# ---------------------------------------------------------------------------
+def serve_case(n: int, n_requests: int, data_plane: str, seed: int = 0,
+               horizon_s: float = HORIZON_S) -> dict:
+    """One serving cell: regional-burst traffic with heavy payloads against
+    least-loaded routing. Returns wall-clock + the equivalence metrics."""
+    import numpy as np
+
+    from repro.core import cost_model as cm
+    from repro.core.graph import random_fleet
+    from repro.serve.costs import serve_model_from_task
+    from repro.serve.traffic import ModelMix, TrafficConfig, generate
+    from repro.sim.workload import ServeExecutor
+
+    g = random_fleet(n, seed=seed)
+    task = cm.ModelTask("Bench-7B", 7e9, 32, 4096)
+    sm = serve_model_from_task(task, name="bench-7b", decode_efficiency=0.02,
+                               request_bytes_per_token=32768.0,
+                               response_bytes_per_token=32768.0)
+    regions = tuple(dict.fromkeys(m.region for m in g.machines))
+    cfg = TrafficConfig(
+        rate_rps=n_requests / horizon_s, horizon_s=horizon_s,
+        regions=regions, burst_factor=3.0,
+        burst_window=(0.35 * horizon_s, 0.55 * horizon_s),
+        mixes=(ModelMix("bench-7b", prompt_median=128.0, gen_median=32.0),))
+    trace = generate(cfg, seed=seed)
+    t0 = time.perf_counter()
+    raw = ServeExecutor(g, sm, trace, "least_loaded",
+                        n_replicas=max(4, n // 16), max_batch=16,
+                        seed=seed, data_plane=data_plane).run()
+    wall = time.perf_counter() - t0
+    lats = np.array([r.latency_s for r in raw["records"].values()
+                     if r.latency_s is not None], float)
+    return {
+        "wall_s": wall,
+        "n_events": raw["n_events"],
+        "events_per_s": raw["n_events"] / max(wall, 1e-9),
+        "n_requests": len(trace),
+        "n_completed": int(lats.size),
+        "p95_s": float(np.percentile(lats, 95)) if lats.size else math.inf,
+        "makespan_s": raw["end_s"],
+    }
+
+
+def train_case(n: int, data_plane: str, seed: int = 0,
+               steps: int = 2) -> dict:
+    """One training cell: three concurrent DP tasks on the full fleet —
+    every step barrier starts n-1 flows per task at one timestamp."""
+    from repro.core import cost_model as cm
+    from repro.core.graph import random_fleet
+    from repro.sim.evaluate import FleetSimulation, FullFleetPlacer
+
+    g = random_fleet(n, seed=seed)
+    tasks = [dataclasses.replace(cm.GPT2_1_5B, name=f"GPT2-1.5B[{k}]")
+             for k in range(3)]
+    placer = FullFleetPlacer("dp", tasks, "A")
+    t0 = time.perf_counter()
+    res = FleetSimulation(g, tasks, placer, steps=steps, seed=seed,
+                          concurrent=True, net_solver=data_plane).run()
+    wall = time.perf_counter() - t0
+    return {
+        "wall_s": wall,
+        "n_events": res.n_events,
+        "events_per_s": res.n_events / max(wall, 1e-9),
+        "makespan_s": res.makespan,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Harness
+# ---------------------------------------------------------------------------
+def _rel(a: float, b: float) -> float:
+    if a == b:
+        return 0.0
+    denom = max(abs(a), abs(b), 1e-12)
+    return abs(a - b) / denom
+
+
+def _check_cell(name: str, fast: dict, fast2: dict, ref: dict | None,
+                metrics: tuple[str, ...]) -> dict:
+    row: dict = {"fast": fast, "fast_rerun": {m: fast2[m] for m in metrics},
+                 "deterministic": all(fast[m] == fast2[m] for m in metrics)
+                 and fast["n_events"] == fast2["n_events"]}
+    assert row["deterministic"], \
+        f"{name}: fast path not seed-deterministic: {fast} vs {fast2}"
+    if ref is None:
+        row["ref_skipped"] = True
+        return row
+    row["reference"] = ref
+    row["speedup"] = ref["wall_s"] / max(fast["wall_s"], 1e-9)
+    errs = {m: _rel(fast[m], ref[m]) for m in metrics}
+    row["metric_rel_errors"] = errs
+    for m, e in errs.items():
+        assert e <= EQUIV_RTOL, \
+            f"{name}: fast vs reference {m} diverged: {e:.3e} " \
+            f"({fast[m]} vs {ref[m]})"
+    return row
+
+
+def run_fleet_bench(serve_grid=SERVE_GRID, train_grid=TRAIN_GRID,
+                    ref_skip=REF_SKIP, accept_cell=ACCEPT_CELL,
+                    horizon_s: float = HORIZON_S, seed: int = 0,
+                    out_path: str = OUT) -> dict:
+    import jax
+
+    serve_rows: dict[str, dict] = {}
+    for n, n_req in serve_grid:
+        name = f"serve_n{n}_r{n_req}"
+        print(f"[fleet_bench] {name} ...", file=sys.stderr, flush=True)
+        fast = serve_case(n, n_req, "fast", seed=seed, horizon_s=horizon_s)
+        fast2 = serve_case(n, n_req, "fast", seed=seed, horizon_s=horizon_s)
+        ref = None if (n, n_req) in ref_skip else \
+            serve_case(n, n_req, "reference", seed=seed, horizon_s=horizon_s)
+        if ref is not None:
+            assert ref["n_completed"] == fast["n_completed"]
+        serve_rows[name] = _check_cell(
+            name, fast, fast2, ref, ("p95_s", "makespan_s", "n_completed"))
+
+    train_rows: dict[str, dict] = {}
+    for n in train_grid:
+        name = f"train_n{n}"
+        print(f"[fleet_bench] {name} ...", file=sys.stderr, flush=True)
+        fast = train_case(n, "fast", seed=seed)
+        fast2 = train_case(n, "fast", seed=seed)
+        ref = train_case(n, "reference", seed=seed)
+        train_rows[name] = _check_cell(name, fast, fast2, ref,
+                                       ("makespan_s",))
+
+    accept_name = f"serve_n{accept_cell[0]}_r{accept_cell[1]}"
+    accept_speedup = serve_rows[accept_name].get("speedup", math.nan)
+
+    res = {
+        "artifact": "fleet_bench",
+        "machine": {"platform": platform.platform(),
+                    "python": platform.python_version(),
+                    "jax": jax.__version__},
+        "config": {"seed": seed, "horizon_s": horizon_s,
+                   "equiv_rtol": EQUIV_RTOL,
+                   "speedup_floor": SPEEDUP_FLOOR,
+                   "accept_cell": list(accept_cell)},
+        "serve": serve_rows,
+        "train": train_rows,
+        "accept_speedup": accept_speedup,
+        "table": _table(serve_rows, train_rows),
+    }
+    res["derived"] = (f"accept_speedup={accept_speedup:.1f}x "
+                      f"@n={accept_cell[0]}/r={accept_cell[1]} "
+                      f"cells={len(serve_rows) + len(train_rows)}")
+    print(res["table"], file=sys.stderr)
+    with open(out_path, "w") as f:
+        json.dump(res, f, indent=1, default=float)
+    return res
+
+
+def _table(serve_rows: dict, train_rows: dict) -> str:
+    head = (f"{'cell':<20}{'fast_s':>9}{'ref_s':>9}{'speedup':>9}"
+            f"{'fast_ev/s':>11}{'max_rel_err':>12}")
+    lines = [head, "-" * len(head)]
+    for name, row in {**serve_rows, **train_rows}.items():
+        fast = row["fast"]
+        if row.get("ref_skipped"):
+            ref_s, sp, err = "skip", "-", "-"
+        else:
+            ref_s = f"{row['reference']['wall_s']:.1f}"
+            sp = f"{row['speedup']:.1f}x"
+            err = f"{max(row['metric_rel_errors'].values()):.1e}"
+        lines.append(f"{name:<20}{fast['wall_s']:>9.1f}{ref_s:>9}{sp:>9}"
+                     f"{fast['events_per_s']:>11.0f}{err:>12}")
+    return "\n".join(lines)
+
+
+def check_result(res: dict, smoke: bool = False) -> None:
+    """Schema + acceptance assertions the CI smoke job relies on."""
+    assert res["artifact"] == "fleet_bench"
+    for section in ("serve", "train"):
+        assert res[section], f"empty {section} section"
+        for name, row in res[section].items():
+            assert row["deterministic"] is True, name
+            if not row.get("ref_skipped"):
+                assert max(row["metric_rel_errors"].values()) <= EQUIV_RTOL
+    if not smoke:
+        # acceptance: >=5x over the reference path at n=128, 20k requests
+        assert res["accept_speedup"] >= SPEEDUP_FLOOR, res["accept_speedup"]
+
+
+def fleet_bench_artifact() -> dict:
+    """benchmarks/run.py entry: full grid, writes BENCH_fleet.json."""
+    res = run_fleet_bench()
+    check_result(res)
+    return res
+
+
+ALL = [fleet_bench_artifact]
+
+
+def main(argv=None) -> None:
+    _sys_path()
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunken grid (n<=32, 2k requests), every cell "
+                         "reference-checked; asserts the harness emits "
+                         "valid JSON (CI)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        out = args.out or SMOKE_OUT
+        res = run_fleet_bench(
+            serve_grid=((16, 500), (32, 2_000)), train_grid=(16, 32),
+            ref_skip=set(), accept_cell=(32, 2_000),
+            horizon_s=120.0, out_path=out)
+        with open(out) as f:   # must round-trip as valid JSON
+            check_result(json.load(f), smoke=True)
+        print(f"fleet_bench --smoke PASS ({res['derived']}) wrote {out}")
+        return
+
+    res = run_fleet_bench(out_path=args.out or OUT)
+    check_result(res)
+    print(json.dumps({k: v for k, v in res.items()
+                      if k not in ("machine", "table")},
+                     indent=1, default=float))
+    print(f"wrote {args.out or OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -98,6 +98,32 @@ class PaperLinearComm:
         return lat * MS * nbytes / 64.0
 
 
+# Latency-class capacity table shared by the scalar and vectorized
+# link_bandwidth: (upper latency bound in ms, bytes/s). Order matters.
+_BW_CLASSES = ((2.0, 10e9),      # same-region LAN
+               (120.0, 1e9),     # good WAN
+               (250.0, 0.3e9))
+_BW_FLOOR = 0.05e9               # poor intercontinental link
+
+
+def link_bandwidth_array(lat_ms: np.ndarray,
+                         model: str = "alphabeta") -> np.ndarray:
+    """Vectorized ``link_bandwidth`` over a latency matrix/vector: entries
+    with ``lat <= 0`` (diagonal, blocked, unreachable) get bandwidth 0.
+    Same ``_BW_CLASSES`` table as the scalar version — the repro.sim network
+    model builds its whole-fleet capacity tables through this in one pass
+    instead of an O(n^2) Python loop."""
+    lat = np.asarray(lat_ms, np.float64)
+    pos = lat > 0
+    if model == "paper":
+        out = np.zeros(lat.shape, np.float64)
+        np.divide(64.0, lat * MS, out=out, where=pos)
+        return out
+    conds = [~pos] + [lat <= bound for bound, _ in _BW_CLASSES]
+    choices = [0.0] + [bw for _, bw in _BW_CLASSES]
+    return np.select(conds, choices, default=_BW_FLOOR)
+
+
 def link_bandwidth(lat_ms: float, model: str = "alphabeta") -> float:
     """Bytes/s capacity of a link with the given latency. Single source of
     truth shared by the analytic comm models and the repro.sim network model
@@ -109,13 +135,10 @@ def link_bandwidth(lat_ms: float, model: str = "alphabeta") -> float:
       to move 64 bytes (so the "bandwidth" is 64 bytes / lat)."""
     if model == "paper":
         return 64.0 / (lat_ms * MS)
-    if lat_ms <= 2.0:
-        return 10e9        # same-region LAN
-    if lat_ms <= 120.0:
-        return 1e9         # good WAN
-    if lat_ms <= 250.0:
-        return 0.3e9
-    return 0.05e9          # poor intercontinental link
+    for bound, bw in _BW_CLASSES:
+        if lat_ms <= bound:
+            return bw
+    return _BW_FLOOR
 
 
 class AlphaBetaComm:

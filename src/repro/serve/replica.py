@@ -17,6 +17,15 @@ loop over the discrete-event engine:
 * completions free their KV reservation and fire the router's callback
   (which moves the response back over the network).
 
+Fleet-scale fast path (PR 4): iteration starts are deferred by one
+zero-delay event so every request routed at the same timestamp is admitted
+into the SAME first batch (an idle replica no longer launches a batch-of-one
+for the first arrival of a burst), and the router's load signal
+(``backlog_work``) is maintained as two integer token counters instead of a
+per-query sweep over the queue — ``pick`` cost no longer scales with queue
+depth. ``backlog_work_reference`` keeps the original sweep for equivalence
+tests.
+
 Calibration contract (asserted in tests/test_serve.py): with zero jitter and
 an idle network, a request's time inside the replica is exactly
 ``ServeModel.service_s(prompt, gen, tflops)`` — chunking only splits the
@@ -57,7 +66,8 @@ class Seq:
 class Replica:
     def __init__(self, sim: Simulator, compute: ComputeModel, machine_id: int,
                  model: ServeModel, memory_gb: float, *, max_batch: int = 8,
-                 prefill_chunk: int = 256, name: str | None = None):
+                 prefill_chunk: int = 256, name: str | None = None,
+                 reference_backlog: bool = False):
         self.sim = sim
         self.compute = compute
         self.machine = int(machine_id)
@@ -65,6 +75,7 @@ class Replica:
         self.name = name or f"replica@{machine_id}"
         self.max_batch = max_batch
         self.prefill_chunk = prefill_chunk
+        self.reference_backlog = reference_backlog
         self.kv_capacity = model.kv_capacity_tokens(memory_gb)
         self.kv_used = 0
         self.queue: collections.deque[Seq] = collections.deque()
@@ -77,6 +88,12 @@ class Replica:
         self.tokens_prefilled = 0
         self.batch_occupancy: float = 0.0   # time-integral of batch size
         self._iter_ev: Optional[Event] = None
+        self._kick_ev: Optional[Event] = None   # deferred iteration start
+        self._idle_cb: Optional[Callable[[], None]] = None
+        # pending-token counters (queued + in flight); integers, so the
+        # incremental backlog is exact, not a float accumulation
+        self._pending_prefill = 0
+        self._pending_decode = 0
 
     # -- queries -------------------------------------------------------------
     def fits(self, req: Request) -> bool:
@@ -88,7 +105,14 @@ class Replica:
 
     def backlog_work(self) -> float:
         """Effective FLOPs of everything queued or in flight — the router's
-        load signal."""
+        load signal. O(1): ``service_work`` is linear in tokens, so the sum
+        over sequences equals the work of the summed token counts."""
+        return self.model.prefill_work(self._pending_prefill) \
+            + self.model.decode_work(self._pending_decode)
+
+    def backlog_work_reference(self) -> float:
+        """The original O(queue + batch) backlog sweep, kept as the
+        equivalence oracle for the counter-based ``backlog_work``."""
         w = 0.0
         for s in self.queue:
             w += self.model.service_work(s.req.prompt_tokens,
@@ -100,7 +124,9 @@ class Replica:
 
     def est_wait_s(self) -> float:
         tf = float(self.compute.tflops[self.machine]) * 1e12
-        return self.backlog_work() / tf
+        work = self.backlog_work_reference() if self.reference_backlog \
+            else self.backlog_work()
+        return work / tf
 
     # -- request flow --------------------------------------------------------
     def submit(self, req: Request, done_cb: Callable[[Seq], None]) -> Seq:
@@ -109,6 +135,8 @@ class Replica:
                   prefill_remaining=req.prompt_tokens,
                   decode_remaining=req.gen_tokens)
         self.queue.append(seq)
+        self._pending_prefill += req.prompt_tokens
+        self._pending_decode += req.gen_tokens
         self._maybe_iterate()
         return seq
 
@@ -122,18 +150,37 @@ class Replica:
             self.running.append(seq)
 
     def _maybe_iterate(self) -> None:
+        """Arm the next iteration. The start is deferred by one zero-delay
+        event so every submit at the current timestamp joins the batch —
+        without it, the first request of a same-tick burst would launch a
+        batch of one and the rest would wait a full iteration."""
+        if not self.alive or self._iter_ev is not None \
+                or self._kick_ev is not None:
+            return
+        if not (self.queue or self.running):
+            return
+        self._kick_ev = self.sim.schedule(0.0, self._start_iteration)
+
+    def _start_iteration(self) -> None:
+        self._kick_ev = None
         if not self.alive or self._iter_ev is not None:
             return
         self._admit()
         if not self.running:
             return
-        work = 0.0
+        # one cost-card call per phase, not per sequence: decode tokens are
+        # identical (1 each), so the batch prices as decode_work(n_decoding)
+        chunk = self.prefill_chunk
+        prefill_tokens = 0
+        n_decoding = 0
         for s in self.running:
             if s.prefill_remaining > 0:
-                work += self.model.prefill_work(
-                    min(self.prefill_chunk, s.prefill_remaining))
+                prefill_tokens += chunk if s.prefill_remaining > chunk \
+                    else s.prefill_remaining
             else:
-                work += self.model.decode_work(1)
+                n_decoding += 1
+        work = self.model.prefill_work(prefill_tokens) \
+            + self.model.decode_work(n_decoding)
         dur = self.compute.duration(self.machine, work, step=self.it,
                                     microbatch=0, tag=_TAG_SERVE)
         self.busy_s += dur
@@ -151,9 +198,11 @@ class Replica:
                 chunk = min(self.prefill_chunk, s.prefill_remaining)
                 s.prefill_remaining -= chunk
                 self.tokens_prefilled += chunk
+                self._pending_prefill -= chunk
             else:
                 s.decode_remaining -= 1
                 self.tokens_decoded += 1
+                self._pending_decode -= 1
                 if s.t_first_token is None:
                     s.t_first_token = self.sim.now
                 if s.decode_remaining == 0:
@@ -162,10 +211,17 @@ class Replica:
             self.running.remove(s)
             self.kv_used -= s.kv_tokens
             s.t_done = self.sim.now
-        self._maybe_iterate()
+        # continue the batch inline — the deferred (zero-delay-event) start
+        # is only needed on the idle->busy edge, where it lets a same-tick
+        # burst of submits share the first batch; a replica mid-stream
+        # admits at its own iteration boundary, like a real engine
+        self._start_iteration()
         # callbacks last: they may route new work back into this replica
         for s in done:
             s.done_cb(s)
+        if self._idle_cb is not None and not self.running and not self.queue:
+            cb, self._idle_cb = self._idle_cb, None
+            cb()
 
     # -- lifecycle -----------------------------------------------------------
     def drain(self) -> list[Request]:
@@ -173,8 +229,20 @@ class Replica:
         router can place them elsewhere. In-flight sequences finish."""
         self.accepting = False
         dropped = [s.req for s in self.queue]
+        for s in self.queue:
+            self._pending_prefill -= s.req.prompt_tokens
+            self._pending_decode -= s.req.gen_tokens
         self.queue.clear()
         return dropped
+
+    def when_idle(self, cb: Callable[[], None]) -> None:
+        """Run ``cb`` once nothing is queued or in flight (fires immediately
+        if already idle). Used by the executor to deprovision a drained
+        replica's machine only after its last response has left."""
+        if not self.running and not self.queue:
+            cb()
+        else:
+            self._idle_cb = cb
 
     def fail(self) -> list[Request]:
         """Machine died: every queued AND in-flight request is interrupted
@@ -182,14 +250,20 @@ class Replica:
         no cross-replica KV migration yet)."""
         self.alive = False
         self.accepting = False
+        self._idle_cb = None
         if self._iter_ev is not None:
             self._iter_ev.cancel()
             self._iter_ev = None
+        if self._kick_ev is not None:
+            self._kick_ev.cancel()
+            self._kick_ev = None
         interrupted = [s.req for s in self.queue] \
             + [s.req for s in self.running]
         self.queue.clear()
         self.running.clear()
         self.kv_used = 0
+        self._pending_prefill = 0
+        self._pending_decode = 0
         return interrupted
 
     def stats(self) -> dict:

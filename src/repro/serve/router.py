@@ -39,14 +39,19 @@ from repro.serve.traffic import Request
 POLICIES = ("nearest", "least_loaded", "hulk")
 
 
-def entry_node(graph: ClusterGraph, region: str) -> int:
+def entry_node(graph: ClusterGraph, region: str,
+               exclude: Sequence[int] = ()) -> int:
     """Where a user region's traffic enters the fleet: the machine in that
-    region, else the machine with the lowest inter-region latency estimate."""
+    region, else the machine with the lowest inter-region latency estimate.
+    ``exclude`` skips deprovisioned machines."""
+    dead = set(exclude)
     for i, m in enumerate(graph.machines):
-        if m.region == region:
+        if m.region == region and i not in dead:
             return i
 
     def est(i: int) -> float:
+        if i in dead:
+            return math.inf
         w = region_latency_ms(region, graph.machines[i].region)
         return math.inf if np.isnan(w) else float(w)
     return min(range(graph.n), key=est)
@@ -65,22 +70,52 @@ class Router:
         # machines join the fleet
         self.scores = scores
         self._entry: dict[str, int] = {}
+        # static half of a replica's routing score — routed latency and GNN
+        # probability per (entry node, machine). Only the backlog term is
+        # dynamic, so per-request scoring never re-reads the latency table;
+        # invalidated whenever the topology or the replica set changes.
+        self._static: dict[tuple[int, int], tuple[float, float]] = {}
+
+    def invalidate(self) -> None:
+        """Topology or replica set changed: drop every derived cache."""
+        self._entry.clear()
+        self._static.clear()
+
+    def on_machine_joined(self, graph: ClusterGraph,
+                          scores: Optional[np.ndarray] = None) -> None:
+        """A provisioned machine joined the fleet: adopt the new graph (and
+        refreshed GNN scores) and re-derive entry nodes, so a join that is a
+        strictly better entry for a region actually takes it over."""
+        self.graph = graph
+        if scores is not None:
+            self.scores = scores
+        self.invalidate()
 
     def entry(self, region: str) -> int:
         if region not in self._entry:
-            self._entry[region] = entry_node(self.graph, region)
+            self._entry[region] = entry_node(
+                self.graph, region, getattr(self.net, "tombstoned", ()))
         return self._entry[region]
 
+    def _static_parts(self, src: int, machine: int) -> tuple[float, float]:
+        key = (src, machine)
+        v = self._static.get(key)
+        if v is None:
+            lat_s = float(self.net.routed_ms[src, machine]) * 1e-3
+            prob = 0.0
+            if self.scores is not None and machine < len(self.scores):
+                prob = float(self.scores[machine])
+            v = (lat_s, prob)
+            self._static[key] = v
+        return v
+
     def _score(self, req: Request, src: int, rep: Replica) -> float:
-        lat_s = float(self.net.routed_ms[src, rep.machine]) * 1e-3
+        lat_s, prob = self._static_parts(src, rep.machine)
         if self.policy == "nearest":
             return lat_s
         wait = rep.est_wait_s()
         if self.policy == "least_loaded":
             return lat_s + wait
-        prob = 0.0
-        if self.scores is not None and rep.machine < len(self.scores):
-            prob = float(self.scores[rep.machine])
         return (lat_s + wait) / (0.25 + prob)
 
     def pick(self, req: Request,

@@ -44,6 +44,7 @@ class ComputeModel:
             slow = rng.choice(graph.n, size=min(k, graph.n), replace=False)
             self.slow_factor[slow] = self.jitter.straggler_slowdown
         self.busy_s = np.zeros(graph.n)  # accounting: total busy time/machine
+        self.alive = np.ones(graph.n, bool)   # False = deprovisioned
 
     def stragglers(self) -> list[int]:
         return [int(i) for i in np.nonzero(self.slow_factor > 1.0)[0]]
@@ -55,10 +56,22 @@ class ComputeModel:
         self.tflops = np.append(self.tflops, np.float32(machine.tflops))
         self.slow_factor = np.append(self.slow_factor, 1.0)
         self.busy_s = np.append(self.busy_s, 0.0)
+        self.alive = np.append(self.alive, True)
         return len(self.tflops) - 1
+
+    def remove_machine(self, machine: int) -> None:
+        """Deprovision (autoscale scale-down): the machine's accounting stays
+        (its busy seconds happened) but it is marked dead."""
+        self.alive[machine] = False
+
+    def revive_machine(self, machine: int) -> None:
+        """Re-provision a previously deprovisioned machine."""
+        self.alive[machine] = True
 
     def duration(self, machine: int, work_flops: float, step: int = 0,
                  microbatch: int = 0, tag: int = 0) -> float:
+        if not self.alive[machine]:
+            raise ValueError(f"machine {machine} is deprovisioned")
         base = work_flops / (float(self.tflops[machine]) * 1e12)
         f = float(self.slow_factor[machine])
         if self.jitter.sigma > 0:

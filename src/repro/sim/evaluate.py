@@ -174,11 +174,13 @@ class FleetSimulation:
                  traffic: Optional[sc.TrafficBuilder] = None,
                  fault_fracs: Sequence[float] = (),
                  kills_per_fault: int = 1,
-                 steps: int = 3, seed: int = 0, concurrent: bool = True):
+                 steps: int = 3, seed: int = 0, concurrent: bool = True,
+                 net_solver: str = "fast"):
         self.graph = graph
         self.tasks = list(tasks)
         self.placer = placer
         self.comm_model = comm_model
+        self.net_solver = net_solver
         self.jitter = jitter or JitterConfig()
         self.traffic = traffic
         self.fault_fracs = tuple(fault_fracs)
@@ -214,7 +216,8 @@ class FleetSimulation:
     def _build_models(self, horizon: float) -> None:
         scale = self.traffic(self.graph, horizon) if self.traffic else None
         self.net = NetworkModel(self.graph, self.comm_model,
-                                capacity_scale=scale)
+                                capacity_scale=scale,
+                                solver=self.net_solver)
         self.compute = ComputeModel(self.graph, self.jitter, seed=self.seed)
         self._comm = cm.make_comm(self.graph, self.comm_model)
         self._stragglers = self.compute.stragglers()

@@ -13,6 +13,30 @@ Rate assignment is the classic bottleneck approximation: a flow's rate is
 recomputed whenever a flow starts or finishes (and on periodic ticks when a
 time-varying ``capacity_scale`` is installed, e.g. diurnal traffic).
 
+Two interchangeable solvers compute those rates (``solver=`` ctor arg):
+
+* ``"fast"`` (default) — the fleet-scale path. Per-link flow counts are
+  maintained incrementally; a flow event only marks its own links *dirty*
+  and defers ONE solve to the end of the current timestamp (a burst of N
+  same-time arrivals triggers one solve, not N). The solve re-rates only
+  flows sharing a dirty link, computing every fair share in a single
+  vectorized pass over a CSR-style link-incidence layout
+  (``np.minimum.reduceat`` over per-flow link shares). Since a flow's rate
+  depends only on the per-link counts — never on other flows' rates — the
+  dirty set is exact, not an approximation.
+* ``"reference"`` — the original O(active flows x path length)-per-event
+  Python loop, kept verbatim as ``_rebalance_reference``. Equivalence is
+  asserted by tests (tests/test_fleet_fast_path.py) and by
+  ``benchmarks/fleet_bench.py`` at fleet scale: same rates in exact
+  arithmetic, completion times within float tolerance.
+
+Topology work is vectorized too: routed distances and a next-hop matrix come
+from one bulk scipy shortest-path call (no O(n^2) Python reconstruction);
+concrete paths are reconstructed lazily per (src, dst) pair and cached; and
+``add_machine`` does an incremental single-source update (one Dijkstra from
+the joining node + a vectorized triangle relaxation) instead of the O(n^3)
+all-pairs recompute — it runs on every autoscale join.
+
 Calibration contract (asserted in tests): a *single* flow from i to j takes
 exactly ``core.cost_model``'s communication time —
 
@@ -27,7 +51,9 @@ capped by the end-to-end term.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import itertools
 from typing import Callable, Optional
 
 import numpy as np
@@ -41,9 +67,18 @@ MS = 1e-3
 # bounds how stale a fair-share rate can get between flow events.
 TICK_S = 50.0
 
+_NO_PRED = -9999  # scipy's "no predecessor" sentinel
 
-def _paths(latency_ms: np.ndarray) -> tuple[np.ndarray, list[list[list[int]]]]:
-    """Routed latency matrix + the node path realizing it for every pair."""
+
+def _shortest_paths(latency_ms: np.ndarray) -> tuple[np.ndarray, np.ndarray,
+                                                     np.ndarray]:
+    """(dist_ms, next_hop, pred) for every pair, all bulk ops.
+
+    ``dist_ms`` uses the repo's 0-sentinel for unreachable pairs (and the
+    diagonal); ``next_hop[i, j]`` is the first hop out of ``i`` on the
+    shortest path to ``j`` (-1 when there is none), from which concrete
+    paths are reconstructed lazily; ``pred`` is scipy's predecessor matrix.
+    """
     from scipy.sparse.csgraph import shortest_path
     w = latency_ms.astype(np.float64).copy()
     w[w <= 0] = np.inf
@@ -51,20 +86,49 @@ def _paths(latency_ms: np.ndarray) -> tuple[np.ndarray, list[list[list[int]]]]:
     dist, pred = shortest_path(w, method="D", directed=False,
                                return_predecessors=True)
     n = latency_ms.shape[0]
-    paths: list[list[list[int]]] = [[[] for _ in range(n)] for _ in range(n)]
-    for i in range(n):
-        for j in range(n):
-            if i == j or not np.isfinite(dist[i, j]):
-                continue
-            path = [j]
-            k = j
-            while k != i:
-                k = int(pred[i, k])
-                path.append(k)
-            paths[i][j] = path[::-1]
+    nh = _next_hop_from_pred(pred)
     dist[~np.isfinite(dist)] = 0.0
     np.fill_diagonal(dist, 0.0)
-    return dist.astype(np.float64), paths
+    return dist, nh, pred
+
+
+def _next_hop_from_pred(pred: np.ndarray) -> np.ndarray:
+    """Vectorized predecessor-matrix -> next-hop-matrix conversion.
+
+    Walks every (i, j) chain back toward i simultaneously: iterate
+    ``nh <- pred[i, nh]`` until ``pred[i, nh] == i`` (so nh is i's first
+    hop). Each sweep is one fancy-indexed gather; the number of sweeps is
+    the hop diameter, which is tiny for latency-weighted WAN graphs.
+    """
+    n = pred.shape[0]
+    rows = np.arange(n)[:, None]
+    valid = pred != _NO_PRED                 # reachable, off-diagonal pairs
+    nh = np.where(valid, np.broadcast_to(np.arange(n)[None, :], (n, n)), rows)
+    for _ in range(n):
+        par = pred[rows, nh]
+        step = valid & (par != _NO_PRED) & (par != rows)
+        if not step.any():
+            break
+        nh = np.where(step, par, nh)
+    nh = np.where(valid, nh, -1)
+    return nh.astype(np.int32)
+
+
+def _first_hops_from(pred_u: np.ndarray, u: int) -> np.ndarray:
+    """First hop out of ``u`` toward every node, from a single-source
+    predecessor vector (same back-walk as ``_next_hop_from_pred``, 1-D)."""
+    n = pred_u.shape[0]
+    valid = pred_u != _NO_PRED
+    s = np.where(valid, np.arange(n), u)
+    for _ in range(n):
+        par = pred_u[s]
+        step = valid & (par != _NO_PRED) & (par != u)
+        if not step.any():
+            break
+        s = np.where(step, par, s)
+    s = np.where(valid, s, -1)
+    s[u] = -1
+    return s.astype(np.int32)
 
 
 class UnreachableError(ValueError):
@@ -73,11 +137,21 @@ class UnreachableError(ValueError):
 
 @dataclasses.dataclass
 class _Flow:
+    fid: int
     src: int
     dst: int
     remaining: float                 # bytes left
     cap: float                       # end-to-end rate ceiling (bytes/s)
     links: tuple[tuple[int, int], ...]
+    link_a: np.ndarray               # = [a for (a, b) in links], int64
+    link_b: np.ndarray
+    # Per-link capacities are bound at flow creation (plain floats for the
+    # scalar path, an array for the vectorized one): a flow keeps its
+    # capacities even if a node on its route is tombstoned mid-transfer.
+    # Identical to reading the live table in every non-tombstone state —
+    # add_machine never changes an existing pair's capacity.
+    link_bw: tuple[float, ...]
+    link_bw_arr: np.ndarray
     done_cb: Callable[[], None]
     rate: float = 0.0
     last_update: float = 0.0
@@ -86,16 +160,30 @@ class _Flow:
 
 class NetworkModel:
     def __init__(self, graph: ClusterGraph, comm_model: str = "alphabeta",
-                 capacity_scale: Optional[Callable[[int, float], float]] = None):
+                 capacity_scale: Optional[Callable[[int, float], float]] = None,
+                 solver: str = "fast"):
         if comm_model not in ("alphabeta", "paper"):
             raise ValueError(f"unknown comm model {comm_model!r}")
+        if solver not in ("fast", "reference"):
+            raise ValueError(f"unknown solver {solver!r}")
         self.graph = graph
         self.comm_model = comm_model
         self.capacity_scale = capacity_scale
+        self.solver = solver
+        self.tombstoned: set[int] = set()
+        self._route_cache: dict[tuple[int, int], tuple] = {}
         self._rebuild_topology(graph)
-        self._active: list[_Flow] = []
+        self._active: dict[int, _Flow] = {}      # fid -> flow, insertion order
+        self._fid = itertools.count()
+        # fast-solver state: per-link membership + dirty tracking
+        self._flows_on_link: dict[tuple[int, int], dict[int, _Flow]] = {}
+        self._link_nflows = np.zeros(graph.n * graph.n, np.int64)
+        self._dirty: set[tuple[int, int]] = set()
+        self._dirty_all = False
+        self._solve_ev: Optional[Event] = None
         self._tick_ev: Optional[Event] = None
         self.bytes_moved: float = 0.0
+        self.n_solves: int = 0        # rebalance solves (both solvers)
 
     # -- static queries ------------------------------------------------------
     def latency_s(self, i: int, j: int) -> float:
@@ -106,7 +194,30 @@ class NetworkModel:
         return float(self.routed_ms[i, j]) * MS
 
     def reachable(self, i: int, j: int) -> bool:
-        return i == j or bool(self.paths[i][j])
+        return i == j or self.routed_ms[i, j] > 0
+
+    def _route(self, i: int, j: int) -> Optional[tuple]:
+        """(links, link_a, link_b, per-link bw) of the routed i->j path; None
+        when unreachable. Reconstructed lazily from the next-hop matrix and
+        cached — workloads reuse a small set of (src, dst) pairs heavily."""
+        key = (i, j)
+        hit = self._route_cache.get(key)
+        if hit is not None:
+            return hit
+        if self.routed_ms[i, j] <= 0:
+            return None
+        path = [i]
+        k = i
+        nh = self._next_hop
+        while k != j:
+            k = int(nh[k, j])
+            path.append(k)
+        links = tuple(zip(path[:-1], path[1:]))
+        arr = np.asarray(path, np.int64)
+        bw = tuple(float(self.link_bw[a, b]) for a, b in links)
+        out = (links, arr[:-1], arr[1:], bw, np.asarray(bw, np.float64))
+        self._route_cache[key] = out
+        return out
 
     # -- flow API ------------------------------------------------------------
     def transfer(self, sim: Simulator, i: int, j: int, nbytes: float,
@@ -115,30 +226,42 @@ class NetworkModel:
         if i == j or nbytes <= 0:
             sim.schedule(0.0, done_cb)
             return
-        if not self.paths[i][j]:
+        route = self._route(i, j)
+        if route is None:
             raise UnreachableError(f"no route between machines {i} and {j}")
         self.bytes_moved += float(nbytes)
-        path = self.paths[i][j]
         # Links are full-duplex: each direction is its own resource, so the
         # two opposing hops of a 2-node all-reduce ring don't contend — which
         # keeps the zero-contention limit equal to the analytic model.
-        links = tuple((a, b) for a, b in zip(path[:-1], path[1:]))
-        flow = _Flow(src=i, dst=j, remaining=float(nbytes),
-                     cap=float(self.e2e_bw[i, j]), links=links, done_cb=done_cb)
+        links, link_a, link_b, link_bw, link_bw_arr = route
+        flow = _Flow(fid=next(self._fid), src=i, dst=j,
+                     remaining=float(nbytes), cap=float(self.e2e_bw[i, j]),
+                     links=links, link_a=link_a, link_b=link_b,
+                     link_bw=link_bw, link_bw_arr=link_bw_arr,
+                     done_cb=done_cb)
         # latency phase first; the flow holds no link capacity while in flight
         sim.schedule(self.latency_s(i, j), self._start_flow, sim, flow)
 
     def _start_flow(self, sim: Simulator, flow: _Flow) -> None:
         flow.last_update = sim.now
-        self._active.append(flow)
-        self._rebalance(sim)
+        self._active[flow.fid] = flow
+        if self.solver == "fast":
+            self._attach(flow)
+            self._dirty.update(flow.links)
+            self._request_solve(sim)
+        else:
+            self._rebalance_reference(sim)
         if self.capacity_scale is not None and self._tick_ev is None:
             self._tick_ev = sim.schedule(TICK_S, self._tick, sim)
 
     def _tick(self, sim: Simulator) -> None:
         self._tick_ev = None
         if self._active:
-            self._rebalance(sim)
+            if self.solver == "fast":
+                self._dirty_all = True
+                self._request_solve(sim)
+            else:
+                self._rebalance_reference(sim)
             self._tick_ev = sim.schedule(TICK_S, self._tick, sim)
 
     def _scale(self, node: int, t: float) -> float:
@@ -146,14 +269,169 @@ class NetworkModel:
             return 1.0
         return max(0.05, float(self.capacity_scale(node, t)))
 
-    def _rebalance(self, sim: Simulator) -> None:
+    def _finish_flow(self, sim: Simulator, flow: _Flow) -> None:
+        flow.remaining = 0.0
+        if self.solver == "fast":
+            # the solve retires `flow` (its links are dirty, so it is in the
+            # affected set) and re-rates exactly the flows it contended with
+            self._dirty.update(flow.links)
+            self._request_solve(sim)
+        else:
+            self._rebalance_reference(sim)
+
+    # -- fast solver ---------------------------------------------------------
+    def _attach(self, flow: _Flow) -> None:
+        n = self.graph.n
+        for l in flow.links:
+            self._flows_on_link.setdefault(l, {})[flow.fid] = flow
+            self._link_nflows[l[0] * n + l[1]] += 1
+
+    def _detach(self, flow: _Flow) -> None:
+        n = self.graph.n
+        for l in flow.links:
+            d = self._flows_on_link.get(l)
+            if d is not None:
+                d.pop(flow.fid, None)
+                if not d:
+                    del self._flows_on_link[l]
+            self._link_nflows[l[0] * n + l[1]] -= 1
+
+    def _request_solve(self, sim: Simulator) -> None:
+        """Coalesce: all rebalance requests at one timestamp share ONE solve,
+        scheduled zero-delay so it runs after every same-time flow event."""
+        if self._solve_ev is None:
+            self._solve_ev = sim.schedule(0.0, self._solve, sim)
+
+    def _solve(self, sim: Simulator) -> None:
+        self._solve_ev = None
+        self.n_solves += 1
+        now = sim.now
+        # 1. affected set: flows sharing a dirty link (their fair share may
+        #    have changed); everyone else keeps rate AND finish event.
+        #    Time-varying capacity makes EVERY rate a function of `now`, so
+        #    the dirty-set shortcut is only exact without a capacity_scale
+        #    (the reference re-samples the scale at every event; match it).
+        if self.capacity_scale is not None:
+            self._dirty_all = True
+        if self._dirty_all:
+            queue = collections.deque(self._active.values())
+            self._dirty_all = False
+            self._dirty.clear()
+        else:
+            queue = collections.deque()
+            for l in self._dirty:
+                d = self._flows_on_link.get(l)
+                if d:
+                    queue.extend(d.values())
+            self._dirty.clear()
+        # 2. bank progress at the old rates; retire drained flows BEFORE
+        #    computing shares (a retirement frees capacity, so its links'
+        #    surviving flows join the affected set transitively)
+        banked: set[int] = set()
+        survivors: dict[int, _Flow] = {}
+        finished: list[_Flow] = []
+        while queue:
+            f = queue.popleft()
+            if f.fid in banked:
+                continue
+            banked.add(f.fid)
+            f.remaining = max(0.0, f.remaining - f.rate * (now - f.last_update))
+            f.last_update = now
+            if f.remaining <= 1e-9:
+                finished.append(f)
+                del self._active[f.fid]
+                if f.finish_ev is not None:
+                    f.finish_ev.cancel()
+                    f.finish_ev = None
+                self._detach(f)
+                for l in f.links:
+                    d = self._flows_on_link.get(l)
+                    if d:
+                        queue.extend(d.values())
+            else:
+                survivors[f.fid] = f
+        # 3. new rates for all affected survivors. Large affected sets go
+        #    through one vectorized CSR pass; small ones use a scalar loop of
+        #    the identical formula (the numpy set-up cost exceeds the work
+        #    below a few dozen flows). Either way a flow whose rate did not
+        #    change keeps its pending finish event.
+        flows = list(survivors.values())
+        if len(flows) >= 24:
+            self._rate_vectorized(sim, flows, now)
+        elif flows:
+            self._rate_scalar(sim, flows, now)
+        # completion callbacks only schedule new events, never mutate the
+        # active set synchronously, so firing them last is safe
+        finished.sort(key=lambda f: f.fid)
+        for f in finished:
+            f.done_cb()
+
+    def _reschedule(self, sim: Simulator, f: _Flow, rate: float) -> None:
+        if (rate == f.rate and f.finish_ev is not None
+                and not f.finish_ev.cancelled):
+            return  # unchanged rate: the pending finish stands
+        f.rate = rate
+        if f.finish_ev is not None:
+            f.finish_ev.cancel()
+        f.finish_ev = sim.schedule(f.remaining / rate, self._finish_flow,
+                                   sim, f)
+
+    def _rate_scalar(self, sim: Simulator, flows: list, now: float) -> None:
+        on_link = self._flows_on_link
+        scaled = self.capacity_scale is not None
+        for f in flows:
+            if scaled:
+                rate = f.cap * min(self._scale(f.src, now),
+                                   self._scale(f.dst, now))
+                for (a, b), bw in zip(f.links, f.link_bw):
+                    share = (bw
+                             * min(self._scale(a, now), self._scale(b, now))
+                             / len(on_link[(a, b)]))
+                    rate = min(rate, share)
+            else:
+                rate = f.cap
+                for l, bw in zip(f.links, f.link_bw):
+                    rate = min(rate, bw / len(on_link[l]))
+            self._reschedule(sim, f, rate if rate > 1.0 else 1.0)
+
+    def _rate_vectorized(self, sim: Simulator, flows: list,
+                         now: float) -> None:
+        n = self.graph.n
+        lens = np.fromiter((f.link_a.size for f in flows), np.int64,
+                           len(flows))
+        flat_a = np.concatenate([f.link_a for f in flows])
+        flat_b = np.concatenate([f.link_b for f in flows])
+        lin = flat_a * n + flat_b
+        share = np.concatenate([f.link_bw_arr for f in flows])
+        caps = np.fromiter((f.cap for f in flows), np.float64, len(flows))
+        if self.capacity_scale is not None:
+            node_scale = np.fromiter(
+                (self._scale(v, now) for v in range(n)), np.float64, n)
+            # same op order as the reference: (bw * scale) / count
+            share = share * np.minimum(node_scale[flat_a],
+                                       node_scale[flat_b])
+            srcs = np.fromiter((f.src for f in flows), np.int64, len(flows))
+            dsts = np.fromiter((f.dst for f in flows), np.int64, len(flows))
+            caps = caps * np.minimum(node_scale[srcs], node_scale[dsts])
+        share = share / self._link_nflows[lin]
+        starts = np.zeros(len(flows), np.int64)
+        np.cumsum(lens[:-1], out=starts[1:])
+        rates = np.minimum(caps, np.minimum.reduceat(share, starts))
+        np.maximum(rates, 1.0, out=rates)  # floor avoids div-by-zero stalls
+        for k, f in enumerate(flows):
+            self._reschedule(sim, f, float(rates[k]))
+
+    # -- reference solver (kept for equivalence testing + benchmarking) ------
+    def _rebalance_reference(self, sim: Simulator) -> None:
         """Re-derive every active flow's fair-share rate and reschedule its
-        completion. O(flows x path length) per call."""
+        completion. O(flows x path length) per call — the original
+        implementation the vectorized solver is tested against."""
+        self.n_solves += 1
         now = sim.now
         # 1. bank progress at the old rates; retire flows that just drained
         #    BEFORE computing shares, so they stop occupying their links
         finished: list[_Flow] = []
-        for f in self._active:
+        for f in self._active.values():
             f.remaining = max(0.0, f.remaining - f.rate * (now - f.last_update))
             f.last_update = now
             if f.remaining <= 1e-9:
@@ -162,17 +440,20 @@ class NetworkModel:
             if f.finish_ev is not None:
                 f.finish_ev.cancel()
                 f.finish_ev = None
-            self._active.remove(f)
+            del self._active[f.fid]
         # 2. count surviving flows per link
         n_on: dict[tuple[int, int], int] = {}
-        for f in self._active:
+        for f in self._active.values():
             for l in f.links:
                 n_on[l] = n_on.get(l, 0) + 1
         # 3. new rates + completion events
-        for f in self._active:
+        for f in self._active.values():
             rate = f.cap * min(self._scale(f.src, now), self._scale(f.dst, now))
-            for (a, b) in f.links:
-                share = (self.link_bw[a, b]
+            # f.link_bw values == self.link_bw[a, b] at flow creation (the
+            # only divergence is a mid-transfer tombstone, where the flow
+            # legitimately keeps its capacity)
+            for (a, b), bw in zip(f.links, f.link_bw):
+                share = (bw
                          * min(self._scale(a, now), self._scale(b, now))
                          / n_on[(a, b)])
                 rate = min(rate, share)
@@ -182,53 +463,139 @@ class NetworkModel:
             f.finish_ev = sim.schedule(f.remaining / f.rate,
                                        self._finish_flow, sim, f)
         # completion callbacks only schedule new events, never mutate
-        # self._active synchronously, so firing them last is safe
+        # the active set synchronously, so firing them last is safe
         for f in finished:
             self._complete(sim, f)
 
-    def _finish_flow(self, sim: Simulator, flow: _Flow) -> None:
-        flow.remaining = 0.0
-        self._rebalance(sim)  # retires `flow` and re-rates the survivors
-
     def _complete(self, sim: Simulator, flow: _Flow) -> None:
-        if flow in self._active:
-            self._active.remove(flow)
+        self._active.pop(flow.fid, None)
         flow.done_cb()
 
+    # -- topology ------------------------------------------------------------
+    def _masked_latency(self) -> np.ndarray:
+        """Graph latency with tombstoned (deprovisioned) nodes cut out."""
+        lat = self.graph.latency
+        if self.tombstoned:
+            lat = lat.copy()
+            dead = sorted(self.tombstoned)
+            lat[dead, :] = 0.0
+            lat[:, dead] = 0.0
+        return lat
+
     def _rebuild_topology(self, graph: ClusterGraph) -> None:
-        """Routed paths + bandwidth tables for ``graph``. Per-link capacity
-        comes from the *direct* latency; the end-to-end ceiling from the
-        *routed* latency (see module docstring for why this calibrates)."""
-        self.routed_ms, self.paths = _paths(graph.latency)
-        n = graph.n
-        self.link_bw = np.zeros((n, n))
-        self.e2e_bw = np.zeros((n, n))
-        for bw, lat_ms in ((self.link_bw, graph.latency),
-                           (self.e2e_bw, self.routed_ms)):
-            for i in range(n):
-                for j in range(n):
-                    lat = float(lat_ms[i, j])
-                    if i != j and lat > 0:
-                        bw[i, j] = cm.link_bandwidth(lat, self.comm_model)
+        """Routed distances + next hops + bandwidth tables for ``graph``, all
+        bulk numpy/scipy ops. Per-link capacity comes from the *direct*
+        latency; the end-to-end ceiling from the *routed* latency (see module
+        docstring for why this calibrates)."""
+        self.graph = graph
+        lat = self._masked_latency()
+        self.routed_ms, self._next_hop, _ = _shortest_paths(lat)
+        self._refresh_bandwidth(lat)
+        self._route_cache.clear()
+
+    def _refresh_bandwidth(self, lat: np.ndarray) -> None:
+        self.link_bw = cm.link_bandwidth_array(lat, self.comm_model)
+        self.e2e_bw = cm.link_bandwidth_array(self.routed_ms, self.comm_model)
 
     # -- elasticity ----------------------------------------------------------
     def add_machine(self, graph: ClusterGraph) -> None:
-        """The fleet grew (autoscale provisioning): adopt the (n+1)-node
+        """The fleet grew (autoscale provisioning): adopt the (n+k)-node
         graph. Active flows keep their routes and caps — their links are
         (old_i, old_j) pairs whose capacities are unchanged — while new
-        transfers see the extended topology. O(n^3) path recompute; joins
-        are rare control-plane events."""
+        transfers see the extended topology. Incremental: per joining node,
+        ONE single-source Dijkstra plus a vectorized triangle relaxation
+        (shortcuts through the new node), instead of the all-pairs
+        recompute."""
         if graph.n < self.graph.n:
             raise ValueError("add_machine cannot shrink the fleet")
+        from scipy.sparse.csgraph import shortest_path
+        old_n = self.routed_ms.shape[0]
         self.graph = graph
-        self._rebuild_topology(graph)
+        lat = self._masked_latency()
+        w = lat.astype(np.float64).copy()
+        w[w <= 0] = np.inf
+        np.fill_diagonal(w, 0.0)
+        # internal inf-sentinel distance matrix for the relaxation
+        dist = self.routed_ms.copy()
+        dist[dist <= 0] = np.inf
+        np.fill_diagonal(dist, 0.0)
+        nh = self._next_hop
+        for u in range(old_n, graph.n):
+            m = u + 1
+            du, pu = shortest_path(w[:m, :m], method="D", directed=False,
+                                   indices=u, return_predecessors=True)
+            grown = np.full((m, m), np.inf)
+            grown[:u, :u] = dist[:u, :u]
+            grown[u, :] = du
+            grown[:, u] = du
+            np.fill_diagonal(grown, 0.0)
+            dist = grown
+            nh_grown = np.full((m, m), -1, np.int32)
+            nh_grown[:u, :u] = nh[:u, :u]
+            nh_grown[u, :] = _first_hops_from(pu, u)
+            # first hop from j toward u = predecessor of j on the u->j path
+            nh_grown[:, u] = np.where(pu == _NO_PRED, -1, pu)
+            nh = nh_grown
+            # triangle relaxation: pairs that improve by relaying through u
+            alt = du[:u, None] + du[None, :u]
+            imp = alt < dist[:u, :u]
+            if imp.any():
+                dist[:u, :u][imp] = alt[imp]
+                nh[:u, :u][imp] = np.broadcast_to(pu[:u, None], (u, u))[imp]
+        dist[~np.isfinite(dist)] = 0.0
+        np.fill_diagonal(dist, 0.0)
+        self.routed_ms = dist
+        self._next_hop = nh
+        self._refresh_bandwidth(lat)
+        self._route_cache.clear()
+        self._rebuild_link_counts()
+
+    def remove_machine(self, mid: int) -> None:
+        """Deprovision (autoscale scale-down): tombstone the node. New
+        transfers can no longer source, target, or relay through it; active
+        flows keep their links (the machine's NIC dies after they drain —
+        callers deprovision only once the replica is idle)."""
+        if not (0 <= mid < self.graph.n):
+            raise ValueError(f"no machine {mid}")
+        if mid in self.tombstoned:
+            return
+        self.tombstoned.add(mid)
+        # n is unchanged, so the linearized link-count table stays valid
+        self._rebuild_topology(self.graph)
+
+    def revive_machine(self, mid: int) -> None:
+        """Re-provision a previously tombstoned machine (scale-up reusing a
+        deprovisioned node)."""
+        if mid not in self.tombstoned:
+            return
+        self.tombstoned.discard(mid)
+        self._rebuild_topology(self.graph)
+
+    def _rebuild_link_counts(self) -> None:
+        """Re-derive the flat per-link flow-count table after n (and with it
+        the linearized link index a*n+b) changed."""
+        n = self.graph.n
+        self._link_nflows = np.zeros(n * n, np.int64)
+        for (a, b), d in self._flows_on_link.items():
+            self._link_nflows[a * n + b] = len(d)
 
     # -- lifecycle -----------------------------------------------------------
     def reset(self) -> None:
         """Drop all in-flight flows (used when a re-plan bumps the epoch; the
-        flows' pending events die with the old epoch)."""
-        for f in self._active:
+        flows' pending events die with the old epoch). Pending tick/solve
+        events are cancelled explicitly so a reset NOT accompanied by an
+        epoch bump can't fire a stale rebalance."""
+        for f in self._active.values():
             if f.finish_ev is not None:
                 f.finish_ev.cancel()
         self._active.clear()
-        self._tick_ev = None
+        self._flows_on_link.clear()
+        self._link_nflows[:] = 0
+        self._dirty.clear()
+        self._dirty_all = False
+        if self._tick_ev is not None:
+            self._tick_ev.cancel()
+            self._tick_ev = None
+        if self._solve_ev is not None:
+            self._solve_ev.cancel()
+            self._solve_ev = None

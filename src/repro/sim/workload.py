@@ -34,7 +34,17 @@ scales the replica set, provisioning spare machines into the live graph
 (``NetworkModel.add_machine`` / ``ComputeModel.add_machine``) with a
 cold-start weight transfer from the nearest live replica, and — under the
 Hulk policy — re-planning placement through
-``runtime.elastic.ElasticRuntime.on_join``.
+``runtime.elastic.ElasticRuntime.on_join``. Scale-downs deprovision: once
+the drained replica goes idle its machine is tombstoned out of the network
+and compute models (``remove_machine``), and a later scale-up revives it.
+
+``data_plane="fast"`` (default) runs the fleet-scale request path: the
+vectorized dirty-link flow solver, a cached healthy-replica list, router
+entry/score caches invalidated on replica-set or topology changes, and the
+replicas' O(1) integer-counter backlog. ``data_plane="reference"`` selects
+the kept reference implementations (per-event rebalance loop, O(queue)
+backlog sweep) — ``benchmarks/fleet_bench.py`` drives both and asserts
+equivalence.
 """
 from __future__ import annotations
 
@@ -248,7 +258,8 @@ class ServeExecutor:
                  prefill_chunk: int = 256,
                  autoscale=None, spares: Sequence[Machine] = (),
                  fault_fracs: Sequence[float] = (), kills_per_fault: int = 1,
-                 seed: int = 0, run_until_s: Optional[float] = None):
+                 seed: int = 0, run_until_s: Optional[float] = None,
+                 data_plane: str = "fast"):
         from repro.serve.autoscale import Autoscaler
         from repro.serve.replica import Replica
         from repro.serve.router import HulkPlacement, Router, StaticPlacement
@@ -263,8 +274,11 @@ class ServeExecutor:
         self.kills_per_fault = kills_per_fault
         self._Replica = Replica
 
+        if data_plane not in ("fast", "reference"):
+            raise ValueError(f"unknown data plane {data_plane!r}")
+        self.data_plane = data_plane
         self.sim = Simulator()
-        self.net = NetworkModel(graph, comm_model)
+        self.net = NetworkModel(graph, comm_model, solver=data_plane)
         self.compute = ComputeModel(graph, jitter, seed=seed)
 
         if policy == "hulk":
@@ -297,6 +311,9 @@ class ServeExecutor:
         # a scale-down can abort them before they open
         self._provisioning: set[int] = set()
         self._cancelled_starts: set[int] = set()
+        # per-request fast path: the healthy-replica list is cached between
+        # replica-set changes instead of being rebuilt for every arrival
+        self._rep_cache: Optional[list] = None
 
         self.autoscaler = None
         if autoscale is not None:
@@ -309,17 +326,34 @@ class ServeExecutor:
                 scale_up=self._scale_up, scale_down=self._scale_down)
 
     # -- replica lifecycle ---------------------------------------------------
+    def _routing_changed(self) -> None:
+        """The replica set (or topology) changed: drop the cached replica
+        list and every router-side score/entry cache."""
+        self._rep_cache = None
+        self.router.invalidate()
+
+    def _replica_list(self) -> list:
+        if self._rep_cache is None:
+            self._rep_cache = list(self.replicas.values())
+        return self._rep_cache
+
     def _add_replica(self, mid: int) -> None:
         mem = float(self.graph.memory_gb()[mid])
         self.replicas[mid] = self._Replica(
             self.sim, self.compute, mid, self.model, mem,
-            max_batch=self.max_batch, prefill_chunk=self.prefill_chunk)
+            max_batch=self.max_batch, prefill_chunk=self.prefill_chunk,
+            reference_backlog=self.data_plane == "reference")
+        self._routing_changed()
 
     def _cold_start(self, mid: int) -> None:
         """Weights stream from the nearest live replica (or appear instantly
         when this is the very first one), then the replica opens — unless a
         scale-down cancelled the start while the transfer was in flight."""
-        peers = [m for m, r in self.replicas.items() if r.alive]
+        # routed_ms uses 0 as the unreachable sentinel, so filter on
+        # reachability BEFORE taking the min (else a partitioned peer
+        # looks like the closest one)
+        peers = [m for m, r in self.replicas.items()
+                 if r.alive and self.net.reachable(m, mid)]
         src = min(peers, key=lambda m: float(self.net.routed_ms[m, mid])) \
             if peers else mid
         self._provisioning.add(mid)
@@ -331,6 +365,9 @@ class ServeExecutor:
                 self.scale_log.append({"t": self.sim.now,
                                        "event": "replica_start_aborted",
                                        "machine": mid})
+                # the machine was released while its weights streamed: it
+                # must not linger as a live relay/entry candidate
+                self._deprovision(mid)
                 return
             old = self.replicas.get(mid)
             if old is not None:
@@ -354,12 +391,23 @@ class ServeExecutor:
             self.net.add_machine(self.graph)
             self.compute.add_machine(machine)
             mid = self.placement.on_machine_joined(machine, self.graph)
-            self.router.graph = self.graph
-            self.router.scores = getattr(self.placement, "scores", None)
+            # the join may be a strictly better entry node for some region:
+            # the router re-derives its entry/score caches from the new graph
+            self.router.on_machine_joined(
+                self.graph, getattr(self.placement, "scores", None))
+            self._rep_cache = None
             self.scale_log.append({"t": self.sim.now, "event": "join",
                                    "machine": mid, "region": machine.region})
         if mid is None:
             return False
+        if mid in self.net.tombstoned:
+            # re-provisioning a machine an earlier scale-down released
+            self.net.revive_machine(mid)
+            self.compute.revive_machine(mid)
+            self._routing_changed()
+            self.scale_log.append({"t": self.sim.now,
+                                   "event": "machine_reprovisioned",
+                                   "machine": mid})
         self._cold_start(mid)
         return True
 
@@ -377,11 +425,26 @@ class ServeExecutor:
                 return True
             return False
         self.retired.append(rep)
+        self._routing_changed()
         self.scale_log.append({"t": self.sim.now, "event": "replica_down",
                                "machine": mid})
         for req in rep.drain():
             self._route(req)
+        # release the machine once its in-flight sequences finish and their
+        # responses have left: deprovisioned nodes stop relaying traffic
+        rep.when_idle(lambda: self._deprovision(mid))
         return True
+
+    def _deprovision(self, mid: int) -> None:
+        if mid in self._provisioning \
+                or (mid in self.replicas and self.replicas[mid].alive):
+            return  # a scale-up re-hosted the machine while it drained
+        self.net.remove_machine(mid)
+        self.compute.remove_machine(mid)
+        self._routing_changed()
+        self.scale_log.append({"t": self.sim.now,
+                               "event": "machine_deprovisioned",
+                               "machine": mid})
 
     # -- faults --------------------------------------------------------------
     def _fire_fault(self, k: int) -> None:
@@ -400,6 +463,7 @@ class ServeExecutor:
             self.placement.on_machine_failed(v)
             self.scale_log.append({"t": self.sim.now,
                                    "event": "replica_failed", "machine": v})
+        self._routing_changed()
         for req in interrupted:
             self._route(req)
 
@@ -414,7 +478,7 @@ class ServeExecutor:
         if rec.n_routes >= self.MAX_ROUTES:
             rec.dropped = True
             return
-        rep = self.router.pick(req, list(self.replicas.values()))
+        rep = self.router.pick(req, self._replica_list())
         if rep is None:
             rec.dropped = True
             return
@@ -434,6 +498,12 @@ class ServeExecutor:
     def _on_served(self, seq, machine: int) -> None:
         req = seq.req
         dst = self.router.entry(req.region)
+        if not self.net.reachable(machine, dst):
+            # the response's only relay was deprovisioned mid-generation:
+            # the reply is lost (the request path is guarded at pick time,
+            # but a sequence admitted before the tombstone can finish after)
+            self.records[req.rid].dropped = True
+            return
         nbytes = req.gen_tokens * self.model.response_bytes_per_token
         self.net.transfer(self.sim, machine, dst,
                           nbytes, lambda: self._complete(req, seq))

@@ -1,0 +1,380 @@
+"""Fleet-scale simulation fast path: equivalence + regression tests.
+
+Covers the legs of the PR 4 perf pass:
+  * the vectorized dirty-link flow solver matches ``_rebalance_reference``
+    completion times on randomized flow sets (property test, hypothesis
+    with the tests/_compat fallback) and under time-varying capacity;
+  * same-timestamp arrival bursts trigger ONE coalesced solve (the
+    reference path solves once per arrival);
+  * incremental ``add_machine`` topology updates match a from-scratch
+    rebuild, and the lazily reconstructed routes realize the routed
+    distances;
+  * ``reset()`` cancels the pending capacity tick (stale-rebalance bugfix);
+  * scale-down deprovisions the machine from the network/compute models
+    (tombstone) and scale-up revives it; the router's entry cache adopts
+    newly joined machines;
+  * replica fast path: integer-counter backlog == the reference sweep, and
+    same-tick submits share the first batch.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core.graph import ClusterGraph, Machine, paper_fig1_graph, random_fleet
+from repro.serve.costs import serve_model_from_task
+from repro.serve.replica import Replica
+from repro.serve.router import Router
+from repro.sim import ComputeModel, NetworkModel, ServeExecutor, Simulator
+
+from _compat import given, settings, st
+
+CHAT = serve_model_from_task(cm.ModelTask("Chat-34B", 34e9, 60, 7168),
+                             name="chat-34b", decode_efficiency=0.01)
+
+
+def _requests(n, prompt=64, gen=24, region="California", spacing=0.0):
+    from repro.serve import Request
+    return [Request(rid=i, t_arrival=i * spacing, region=region,
+                    model="chat-34b", prompt_tokens=prompt, gen_tokens=gen)
+            for i in range(n)]
+
+
+def _random_transfers(graph, seed, n_flows=40):
+    """Deterministic flow set: (t_start, src, dst, nbytes) on routed pairs."""
+    net = NetworkModel(graph, "alphabeta")
+    rng = np.random.default_rng((seed, 0xF10))
+    flows = []
+    while len(flows) < n_flows:
+        i, j = (int(x) for x in rng.integers(0, graph.n, size=2))
+        if i == j or not net.reachable(i, j):
+            continue
+        flows.append((float(rng.uniform(0.0, 5.0)), i, j,
+                      float(rng.uniform(1e6, 2e9))))
+    return flows
+
+
+def _run_flows(graph, flows, solver, capacity_scale=None):
+    net = NetworkModel(graph, "alphabeta", capacity_scale=capacity_scale,
+                       solver=solver)
+    sim = Simulator()
+    finishes = {}
+    for k, (t0, i, j, nbytes) in enumerate(flows):
+        sim.schedule(t0, net.transfer, sim, i, j, nbytes,
+                     (lambda kk: lambda: finishes.__setitem__(kk, sim.now))(k))
+    sim.run()
+    return finishes, net
+
+
+# ---------------------------------------------------------------------------
+# Flow-solver equivalence (acceptance: same discipline as PR 2's *_reference)
+# ---------------------------------------------------------------------------
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(min_value=0, max_value=60))
+def test_fast_solver_matches_reference_on_random_flows(seed):
+    graph = random_fleet(6 + seed % 7, seed=seed)
+    flows = _random_transfers(graph, seed)
+    fast, _ = _run_flows(graph, flows, "fast")
+    ref, _ = _run_flows(graph, flows, "reference")
+    assert set(fast) == set(ref) == set(range(len(flows)))
+    for k in ref:
+        assert fast[k] == pytest.approx(ref[k], rel=1e-9, abs=1e-9)
+
+
+def test_fast_solver_matches_reference_under_capacity_ticks():
+    """Time-varying capacity exercises the tick path (dirty-all solves)."""
+    graph = paper_fig1_graph()
+
+    def scale(node, t):
+        return 0.3 + 0.7 * abs(math.sin(0.01 * t + node))
+
+    flows = _random_transfers(graph, seed=7, n_flows=30)
+    # stretch flows so several tick periods elapse mid-transfer
+    flows = [(t0, i, j, nbytes * 50.0) for (t0, i, j, nbytes) in flows]
+    fast, _ = _run_flows(graph, flows, "fast", capacity_scale=scale)
+    ref, _ = _run_flows(graph, flows, "reference", capacity_scale=scale)
+    assert set(fast) == set(ref)
+    for k in ref:
+        assert fast[k] == pytest.approx(ref[k], rel=1e-9)
+
+
+def test_fast_solver_is_deterministic():
+    graph = random_fleet(10, seed=2)
+    flows = _random_transfers(graph, seed=2)
+    a, _ = _run_flows(graph, flows, "fast")
+    b, _ = _run_flows(graph, flows, "fast")
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Coalescing regression: a same-timestamp burst is ONE solve
+# ---------------------------------------------------------------------------
+def test_same_timestamp_burst_triggers_one_solve():
+    graph = paper_fig1_graph()
+    burst = 16
+
+    def run(solver):
+        net = NetworkModel(graph, "alphabeta", solver=solver)
+        sim = Simulator()
+        for _ in range(burst):
+            net.transfer(sim, 0, 3, 1e8, lambda: None)
+        # all flows share the same latency phase, so every start lands on
+        # one timestamp; run exactly through it
+        sim.run(until=net.latency_s(0, 3))
+        return net.n_solves
+
+    assert run("reference") == burst       # one rebalance per arrival
+    assert run("fast") == 1                # one coalesced solve
+
+
+# ---------------------------------------------------------------------------
+# Incremental topology
+# ---------------------------------------------------------------------------
+def test_add_machine_incremental_matches_full_rebuild():
+    graph = random_fleet(10, seed=3)
+    net = NetworkModel(graph, "alphabeta")
+    joins = [Machine("Tokyo", "A100", 8), Machine("Rome", "V100", 4),
+             Machine("Beijing", "RTX3090", 8)]
+    for m in joins:
+        graph = graph.add_machine(m)
+        net.add_machine(graph)
+    full = NetworkModel(graph, "alphabeta")
+    np.testing.assert_allclose(net.routed_ms, full.routed_ms,
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(net.e2e_bw, full.e2e_bw, rtol=1e-9)
+    # lazily reconstructed routes must realize the routed distance over
+    # existing edges (ties may pick a different—equally short—path)
+    for i in range(graph.n):
+        for j in range(graph.n):
+            if i == j or not net.reachable(i, j):
+                continue
+            links = net._route(i, j)[0]
+            assert links[0][0] == i and links[-1][1] == j
+            hop_ms = 0.0
+            for a, b in links:
+                assert graph.latency[a, b] > 0
+                hop_ms += float(graph.latency[a, b])
+            assert hop_ms == pytest.approx(float(net.routed_ms[i, j]),
+                                           rel=1e-6)
+
+
+def test_add_machine_connects_previously_blocked_pair():
+    """A joining relay can create the ONLY route between blocked regions."""
+    machines = [Machine("Beijing", "A100", 8), Machine("Paris", "A100", 8)]
+    lat = np.zeros((2, 2), np.float32)   # policy-blocked pair: no edge
+    graph = ClusterGraph(machines, lat)
+    net = NetworkModel(graph, "alphabeta")
+    assert not net.reachable(0, 1)
+    hub = Machine("London", "V100", 8)
+    graph = graph.add_machine(hub, latencies={0: 80.0, 1: 10.0})
+    net.add_machine(graph)
+    assert net.reachable(0, 1)
+    links = net._route(0, 1)[0]
+    assert links == ((0, 2), (2, 1))     # relays through the join
+    assert float(net.routed_ms[0, 1]) == pytest.approx(90.0)
+
+
+# ---------------------------------------------------------------------------
+# reset() bugfix: pending tick is cancelled, not orphaned
+# ---------------------------------------------------------------------------
+def test_reset_cancels_pending_capacity_tick():
+    graph = paper_fig1_graph()
+    net = NetworkModel(graph, "alphabeta",
+                       capacity_scale=lambda node, t: 1.0)
+    sim = Simulator()
+    net.transfer(sim, 0, 1, 1e9, lambda: None)
+    sim.run(until=net.latency_s(0, 1))   # starts the flow, arms the tick
+    tick = net._tick_ev
+    assert tick is not None
+    net.reset()
+    assert net._tick_ev is None
+    assert tick.cancelled            # a reset without an epoch bump can't
+    net.transfer(sim, 0, 1, 1e9, lambda: None)   # fire a stale rebalance
+    sim.run()
+    assert net._tick_ev is None      # exactly one tick chain ran dry
+
+
+# ---------------------------------------------------------------------------
+# Deprovision / revive (ROADMAP serve follow-up)
+# ---------------------------------------------------------------------------
+def test_remove_machine_tombstones_relay_and_revive_restores():
+    machines = [Machine("Beijing", "A100", 8), Machine("London", "V100", 8),
+                Machine("Paris", "A100", 8)]
+    lat = np.zeros((3, 3), np.float32)
+    lat[0, 1] = lat[1, 0] = 80.0         # only the star around London
+    lat[1, 2] = lat[2, 1] = 10.0
+    graph = ClusterGraph(machines, lat)
+    net = NetworkModel(graph, "alphabeta")
+    assert net.reachable(0, 2)
+    net.remove_machine(1)
+    assert 1 in net.tombstoned
+    assert not net.reachable(0, 2)       # relay hub gone
+    assert not net.reachable(0, 1)
+    sim = Simulator()
+    with pytest.raises(Exception):
+        net.transfer(sim, 0, 2, 1e6, lambda: None)
+    net.revive_machine(1)
+    assert net.reachable(0, 2)
+
+
+def test_scale_down_deprovisions_and_scale_up_revives():
+    machines = [Machine.from_caps("California", 8.0, 512.0, 100.0, "m0"),
+                Machine.from_caps("California", 8.0, 512.0, 100.0, "m1"),
+                Machine.from_caps("California", 8.0, 512.0, 100.0, "m2")]
+    lat = np.full((3, 3), 1.0, np.float32)
+    np.fill_diagonal(lat, 0.0)
+    graph = ClusterGraph(machines, lat)
+    ex = ServeExecutor(graph, CHAT, [], "nearest", n_replicas=2, seed=0)
+    assert ex._scale_down() is True
+    ex.sim.run()
+    events = [e["event"] for e in ex.scale_log]
+    assert "machine_deprovisioned" in events
+    dead = next(e["machine"] for e in ex.scale_log
+                if e["event"] == "machine_deprovisioned")
+    assert dead in ex.net.tombstoned
+    assert not ex.compute.alive[dead]
+    live = next(m for m in ex.replicas)
+    assert not ex.net.reachable(live, dead)
+    # scale back up: the placement re-acquires the machine, which must be
+    # revived before its cold-start weight transfer
+    assert ex._scale_up() is True
+    ex.sim.run()
+    events = [e["event"] for e in ex.scale_log]
+    assert "machine_reprovisioned" in events
+    assert dead not in ex.net.tombstoned
+    assert ex.compute.alive[dead]
+    assert ex.replicas[dead].alive
+
+
+def test_scale_down_waits_for_inflight_sequences():
+    """Deprovision must not fire while the drained replica still holds
+    running sequences (their responses still leave over the network)."""
+    machines = [Machine.from_caps("California", 8.0, 512.0, 1.0, "slow0"),
+                Machine.from_caps("California", 8.0, 512.0, 1.0, "slow1")]
+    lat = np.full((2, 2), 1.0, np.float32)
+    np.fill_diagonal(lat, 0.0)
+    graph = ClusterGraph(machines, lat)
+    # staggered arrivals: least_loaded sheds the 2nd request to replica 1,
+    # which is mid-sequence when the scale-down fires at t=8
+    trace = _requests(6, spacing=5.0)
+    ex = ServeExecutor(graph, CHAT, trace, "least_loaded", n_replicas=2,
+                       seed=0, run_until_s=5000.0)
+    fired = {}
+
+    def scale_down_mid_run():
+        fired["down"] = ex._scale_down()
+    ex.sim.schedule(8.0, scale_down_mid_run, pin_epoch=False)
+    raw = ex.run()
+    assert fired["down"] is True
+    t_down = next(e["t"] for e in ex.scale_log
+                  if e["event"] == "replica_down")
+    t_dep = next(e["t"] for e in ex.scale_log
+                 if e["event"] == "machine_deprovisioned")
+    assert t_dep >= t_down
+    # every request still completed (drained ones re-routed)
+    assert all(r.latency_s is not None for r in raw["records"].values())
+
+
+def test_aborted_cold_start_still_deprovisions_the_machine():
+    """A machine released while its weights were streaming must not linger
+    as a live relay/entry candidate: the abort path deprovisions it."""
+    machines = [Machine.from_caps("California", 8.0, 512.0, 100.0, "m0"),
+                Machine.from_caps("California", 8.0, 512.0, 100.0, "m1"),
+                Machine.from_caps("California", 8.0, 512.0, 100.0, "m2")]
+    lat = np.full((3, 3), 1.0, np.float32)
+    np.fill_diagonal(lat, 0.0)
+    graph = ClusterGraph(machines, lat)
+    ex = ServeExecutor(graph, CHAT, [], "nearest", n_replicas=1, seed=0)
+    assert ex._scale_up() is True        # weight transfer now in flight
+    mid = next(iter(ex._provisioning))
+    assert ex._scale_down() is True      # released before the replica opened
+    ex.sim.run()
+    events = [e["event"] for e in ex.scale_log]
+    assert "replica_start_aborted" in events
+    assert "machine_deprovisioned" in events
+    assert mid in ex.net.tombstoned
+    assert mid not in ex.replicas
+
+
+def test_response_over_deprovisioned_relay_drops_instead_of_crashing():
+    """A sequence admitted before its region's only relay is tombstoned can
+    finish after: the reply is lost (request dropped), not a simulator
+    crash from an uncaught UnreachableError."""
+    from repro.serve.replica import Seq
+
+    machines = [Machine("Beijing", "A100", 8),
+                Machine.from_caps("London", 8.0, 512.0, 100.0, "hub"),
+                Machine.from_caps("Paris", 8.0, 512.0, 100.0, "rep")]
+    lat = np.zeros((3, 3), np.float32)
+    lat[0, 1] = lat[1, 0] = 80.0         # Beijing reaches Paris only via
+    lat[1, 2] = lat[2, 1] = 10.0         # the London relay
+    graph = ClusterGraph(machines, lat)
+    trace = _requests(1, region="Beijing")
+    ex = ServeExecutor(graph, CHAT, trace, "nearest", n_replicas=1, seed=0)
+    ex.net.remove_machine(1)             # relay deprovisioned mid-generation
+    seq = Seq(req=trace[0], done_cb=lambda s: None, t_enqueue=0.0)
+    ex._on_served(seq, machine=2)        # must not raise
+    assert ex.records[0].dropped is True
+    assert ex.records[0].t_complete is None
+
+
+# ---------------------------------------------------------------------------
+# Entry-node cache adoption (ROADMAP serve follow-up)
+# ---------------------------------------------------------------------------
+def test_entry_cache_adopts_strictly_better_join():
+    machines = [Machine("California", "A100", 8), Machine("Tokyo", "V100", 8)]
+    rng = np.random.default_rng(0)
+    lat = np.zeros((2, 2), np.float32)
+    lat[0, 1] = lat[1, 0] = 100.0
+    graph = ClusterGraph(machines, lat)
+    net = NetworkModel(graph, "alphabeta")
+    router = Router("nearest", graph, net)
+    before = router.entry("Paris")       # nearest stand-in, cached
+    assert before in (0, 1)
+    paris = Machine("Paris", "A100", 8)
+    graph = graph.add_machine(paris)
+    net.add_machine(graph)
+    router.on_machine_joined(graph)
+    assert router.entry("Paris") == graph.n - 1   # the join took over
+
+
+# ---------------------------------------------------------------------------
+# Replica fast path
+# ---------------------------------------------------------------------------
+def _one_replica(tflops=100.0):
+    m = Machine.from_caps("California", 8.0, 512.0, tflops, "calib")
+    graph = ClusterGraph([m], np.zeros((1, 1), np.float32))
+    sim = Simulator()
+    compute = ComputeModel(graph)
+    return sim, Replica(sim, compute, 0, CHAT, 512.0, max_batch=8,
+                        prefill_chunk=256)
+
+
+def test_backlog_counters_match_reference_sweep():
+    sim, rep = _one_replica()
+    for req in _requests(5, prompt=120, gen=30):
+        rep.submit(req, lambda seq: None)
+    assert rep.backlog_work() == pytest.approx(rep.backlog_work_reference(),
+                                               rel=1e-12)
+    # advance a few iterations so running sequences are partially done
+    for _ in range(4):
+        sim.run(until=sim.now + rep.est_wait_s() / 4.0 + 1e-6)
+        assert rep.backlog_work() == pytest.approx(
+            rep.backlog_work_reference(), rel=1e-12)
+    sim.run()
+    assert rep.backlog_work() == 0.0
+    assert rep.backlog_work_reference() == 0.0
+
+
+def test_same_tick_submits_share_first_batch():
+    sim, rep = _one_replica()
+    done = []
+    for req in _requests(2, prompt=8, gen=4):
+        rep.submit(req, lambda seq: done.append(seq))
+    sim.run()
+    assert len(done) == 2
+    # batched: 1 shared prefill iteration + 4 shared decode iterations.
+    # (the pre-batching path launched a batch-of-one first: 6+ iterations)
+    assert rep.it == 5
+    assert rep.stats()["mean_batch"] == pytest.approx(2.0)
