@@ -6,7 +6,10 @@ times (acceptance bound: 5%; in practice float-rounding exact).
 
 ``sim_scenarios`` — Hulk vs Systems A/B/C across every registered scenario
 (contention, diurnal traffic, stragglers, preemptions, blocked links), run
-twice under the same seed to prove determinism.
+twice under the same seed to prove determinism. Hulk here is the default
+analytic-label configuration; the analytic-vs-sim label comparison is its
+own artifact (``benchmarks/label_bench.py`` -> BENCH_label.json, see
+docs/BENCHMARKS.md).
 """
 from __future__ import annotations
 

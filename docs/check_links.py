@@ -1,0 +1,53 @@
+"""Dependency-free link checker for the docs tree (CI `docs` job).
+
+Scans every Markdown file in docs/ plus the top-level README/ROADMAP for
+inline links and validates the relative ones: the target file (anchor
+stripped) must exist relative to the linking file. External (http/https/
+mailto) links are not fetched — CI must stay hermetic.
+
+    python docs/check_links.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_FILES = [os.path.join(REPO, "README.md"), os.path.join(REPO, "ROADMAP.md")]
+for root, _, files in os.walk(os.path.join(REPO, "docs")):
+    DOC_FILES += [os.path.join(root, f) for f in files if f.endswith(".md")]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def main() -> int:
+    bad: list[str] = []
+    n_links = 0
+    for path in sorted(DOC_FILES):
+        if not os.path.exists(path):
+            bad.append(f"{path}: file listed for checking does not exist")
+            continue
+        with open(path) as f:
+            text = f.read()
+        base = os.path.dirname(path)
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            n_links += 1
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not os.path.exists(os.path.normpath(os.path.join(base, rel))):
+                bad.append(f"{os.path.relpath(path, REPO)}: broken link "
+                           f"-> {target}")
+    if bad:
+        print("\n".join(bad))
+        print(f"FAIL: {len(bad)} broken link(s)")
+        return 1
+    print(f"OK: {n_links} relative links across {len(DOC_FILES)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

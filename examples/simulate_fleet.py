@@ -3,10 +3,13 @@
 1. Train the Hulk placement GNN, then score Hulk vs Systems A/B/C across the
    whole scenario registry (contention, diurnal traffic, stragglers,
    preemption storms, blocked links).
-2. Watch one preemption storm in detail: each machine loss triggers an
+2. Close the simulator-feedback loop on straggler_heavy: re-score Hulk with
+   sim-refined labels + telemetry features (label_mode="sim") and watch the
+   analytic-label loss to System B flip.
+3. Watch one preemption storm in detail: each machine loss triggers an
    elastic re-plan (runtime.elastic) and the interrupted steps restart on the
    new placement.
-3. Bridge to the production mesh: simulate the schedule that
+4. Bridge to the production mesh: simulate the schedule that
    core.placement.plan_runtime picks for a 4-pod TPU fleet.
 
     PYTHONPATH=src python examples/simulate_fleet.py
@@ -20,7 +23,8 @@ import numpy as np
 
 from repro.core import cost_model as cm, placement
 from repro.core.graph import random_fleet
-from repro.sim import comparison_table, evaluate_all, simulate_single
+from repro.sim import (comparison_table, evaluate_all, evaluate_scenario,
+                       get_scenario, simulate_single)
 from repro.sim.evaluate import FleetSimulation, HulkPlacer, trained_gnn
 from repro.sim.scenarios import SIM_TASKS
 
@@ -31,7 +35,18 @@ def main():
     results = evaluate_all(seed=0)
     print(comparison_table(results), "\n")
 
-    # --- 2. a preemption storm under the microscope ----------------------
+    # --- 2. simulator-in-the-loop labels on straggler_heavy --------------
+    # analytic labels price machines at catalog TFLOP/s, so Hulk loses to
+    # System B here; sim-refined labels + telemetry features evict the 3x
+    # stragglers from the pipeline groups and flip the scenario.
+    scn = get_scenario("straggler_heavy")
+    sim_row = evaluate_scenario(scn, seed=0, label_mode="sim")
+    print("straggler_heavy with sim-refined labels (label_mode='sim'):")
+    print(f"  Hulk analytic: {results['straggler_heavy']['Hulk']['makespan_s']:8.1f}s")
+    print(f"  Hulk sim:      {sim_row['Hulk']['makespan_s']:8.1f}s")
+    print(f"  System B:      {sim_row['SystemB']['makespan_s']:8.1f}s\n")
+
+    # --- 3. a preemption storm under the microscope ----------------------
     tasks = list(SIM_TASKS)
     params, cfg = trained_gnn(tasks, seed=0)
     fleet = random_fleet(12, seed=2)
@@ -51,7 +66,7 @@ def main():
     print(f"  makespan: {res.makespan:.1f}s "
           f"({len(res.replans)} re-plans, {res.n_events} events)\n")
 
-    # --- 3. the production pod mesh --------------------------------------
+    # --- 4. the production pod mesh --------------------------------------
     pods = [placement.PodSpec(f"pod{i}", r) for i, r in
             enumerate(["California", "Tokyo", "London", "California"])]
     lat = np.array([[0.0, 118.8, 132.3, 1.0],

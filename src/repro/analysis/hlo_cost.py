@@ -79,7 +79,14 @@ def _first_operands(rest: str) -> list[str]:
             cur.append(ch)
     if cur:
         args.append("".join(cur).strip())
-    return [a.lstrip("%") for a in args if a.strip().startswith("%")]
+    # an operand is "%name" on current jax, "f32[256,256]{1,0} %name" on
+    # older releases that print typed operands — grab the %name either way
+    out = []
+    for a in args:
+        m = re.search(r"%([\w.\-]+)", a.strip())
+        if m:
+            out.append(m.group(1))
+    return out
 
 
 @dataclasses.dataclass

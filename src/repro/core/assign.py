@@ -117,21 +117,34 @@ def task_assignments(graph: ClusterGraph, tasks: Sequence[cm.ModelTask],
 
 def _repair(graph, tasks, groups, deferred, remaining):
     """Give deferred tasks capacity from the free pool first, then steal from
-    over-provisioned groups along the cheapest links."""
+    over-provisioned groups along the cheapest links.
+
+    When the graph carries observed telemetry (simulator feedback — see
+    ``sim.evaluate.observed_telemetry``), candidates are ranked by their
+    persistent slowdown *before* link cost: a repaired pipeline group should
+    absorb healthy machines, not the 3x stragglers the labels just evicted.
+    Without telemetry the ranking reduces to the historical latency-only
+    key, so analytic-mode assignments are bit-identical to before."""
     lat = graph.latency.copy()
     lat[lat <= 0] = np.inf
     mem = graph.memory_gb()
+    slow = (graph.telemetry.slowdown if graph.telemetry is not None
+            else np.ones(graph.n, np.float32))
     by_name = {t.name: t for t in tasks}
     still_deferred = []
+
+    def steal_key(got):
+        return lambda i: (float(slow[i]),
+                          min((lat[i, j] for j in got), default=0.0))
+
     for name in deferred:
         task = by_name[name]
         got = list(groups.get(name, []))
         need = task.min_memory_gb - _mem(graph, got)
         # free pool first
         while need > 0 and remaining:
-            pick = (min(remaining, key=lambda i: min((lat[i, j] for j in got),
-                                                     default=0.0))
-                    if got else remaining[0])
+            pick = (min(remaining, key=steal_key(got))
+                    if got else min(remaining, key=lambda i: float(slow[i])))
             got.append(pick)
             remaining.remove(pick)
             need -= mem[pick]
@@ -143,8 +156,7 @@ def _repair(graph, tasks, groups, deferred, remaining):
                     continue
                 surplus = _mem(graph, ids) - by_name[other].min_memory_gb
                 while need > 0 and surplus > 0 and len(ids) > 1:
-                    pick = min(ids, key=lambda i: min((lat[i, j] for j in got),
-                                                      default=0.0))
+                    pick = min(ids, key=steal_key(got))
                     if surplus - mem[pick] < 0:
                         break
                     ids.remove(pick)

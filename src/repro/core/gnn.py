@@ -82,6 +82,15 @@ def n_params(params: PyTree) -> int:
     return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
 
 
+def d_in_of(params: PyTree) -> int:
+    """Input feature width a param pytree was initialized for. Combined with
+    ``graph.version_for_dim`` this makes checkpoints self-describing: the
+    loaded weights determine which node-feature schema inference must build
+    (the feature-version shim — old v1 checkpoints keep working after v2
+    telemetry features were added)."""
+    return int(params["edge_pool"]["w_self"].shape[0])
+
+
 def edge_mask(lat_adj: jnp.ndarray, node_mask: jnp.ndarray | None,
               dtype) -> jnp.ndarray:
     """0/1 edge mask; ``node_mask`` (n,) zeroes every edge touching padding."""

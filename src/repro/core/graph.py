@@ -4,6 +4,26 @@ Nodes are machines with features {region, compute capability, total GPU
 memory}; edges carry measured communication latency in **ms per 64-byte
 message** (paper Table 1). The adjacency matrix stores latencies; 0 means
 "cannot communicate" (network-policy blocked) and the diagonal is 0.
+
+Feature versions
+----------------
+``node_features(version=...)`` supports two schemas:
+
+* **v1** (default) — ``[one-hot region | capability/10 | memory/512]``,
+  the paper's static machine description. Every pre-existing checkpoint
+  was trained on this layout.
+* **v2** — v1 plus three *runtime-observable* columns threaded back from
+  the simulator (``sim.evaluate.observed_telemetry``): the persistent
+  straggler slowdown multiplier, the per-op jitter sigma, and relay-hub
+  membership (the node forwards traffic for policy-blocked pairs). A
+  graph with no ``telemetry`` attached emits the clean-fleet defaults
+  (slowdown 1, sigma 0, not a hub), so v2 features of an unobserved
+  fleet degrade gracefully to "v1 plus zeros".
+
+``version_for_dim`` maps a model's input width back to its feature
+version — the shim that lets old (v1) checkpoints and new (v2) ones
+coexist: inference derives the feature layout from the loaded params
+instead of assuming the current default (see ``core.train.predict``).
 """
 from __future__ import annotations
 
@@ -112,25 +132,97 @@ class Machine:
         return GPU_CATALOG[self.gpu][2] * self.n_gpus
 
 
+# ---------------------------------------------------------------------------
+# Node telemetry: runtime-observable per-machine signals (feature version 2).
+# ---------------------------------------------------------------------------
+# v2 normalization: slowdown multipliers are O(1..4) (3x stragglers are the
+# stress case), so (slowdown - 1) / SLOWDOWN_SCALE lands in O(0..1).
+SLOWDOWN_SCALE = 4.0
+FEATURE_VERSIONS = (1, 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeTelemetry:
+    """Observed per-machine runtime signals, exported from the simulator
+    (``sim.compute.ComputeModel.telemetry`` + ``sim.network`` relay hubs)
+    and attached to a ``ClusterGraph`` for v2 node features."""
+    slowdown: np.ndarray      # (n,) persistent multiplier, 1.0 = healthy
+    jitter_sigma: np.ndarray  # (n,) lognormal sigma of per-op jitter
+    relay_hub: np.ndarray     # (n,) 1.0 if the node relays blocked pairs
+
+    @classmethod
+    def clean(cls, n: int) -> "NodeTelemetry":
+        """The unobserved default: healthy, jitter-free, no relaying."""
+        return cls(np.ones(n, np.float32), np.zeros(n, np.float32),
+                   np.zeros(n, np.float32))
+
+    def subset(self, ids: Sequence[int]) -> "NodeTelemetry":
+        ids = list(ids)
+        return NodeTelemetry(self.slowdown[ids].copy(),
+                             self.jitter_sigma[ids].copy(),
+                             self.relay_hub[ids].copy())
+
+    def extended(self, k: int = 1) -> "NodeTelemetry":
+        """Telemetry for a fleet that grew by ``k`` (joined machines start
+        with clean signals — nothing has been observed about them yet)."""
+        c = NodeTelemetry.clean(k)
+        return NodeTelemetry(np.append(self.slowdown, c.slowdown),
+                             np.append(self.jitter_sigma, c.jitter_sigma),
+                             np.append(self.relay_hub, c.relay_hub))
+
+
+def feature_dim(version: int) -> int:
+    """Node-feature width of a schema version (see module docstring)."""
+    base = len(REGIONS) + 2
+    if version == 1:
+        return base
+    if version == 2:
+        return base + 3
+    raise ValueError(f"unknown feature version {version}")
+
+
+def version_for_dim(d_in: int) -> int:
+    """Invert ``feature_dim`` — the checkpoint-compat shim: a loaded model's
+    input width tells us which feature schema it was trained on."""
+    for v in FEATURE_VERSIONS:
+        if feature_dim(v) == d_in:
+            return v
+    raise ValueError(f"no feature version has dimension {d_in}; "
+                     f"known: { {v: feature_dim(v) for v in FEATURE_VERSIONS} }")
+
+
 @dataclasses.dataclass
 class ClusterGraph:
-    """Dense graph of machines. latency[i, j] in ms/64B; 0 = no edge."""
+    """Dense graph of machines. latency[i, j] in ms/64B; 0 = no edge.
+    ``telemetry`` (optional) carries observed runtime signals for v2
+    features; structural ops (subgraph/add/remove) keep it aligned."""
     machines: list[Machine]
     latency: np.ndarray  # (n, n) float, 0 on diagonal and blocked pairs
+    telemetry: NodeTelemetry | None = None
 
     @property
     def n(self) -> int:
         return len(self.machines)
 
-    def node_features(self) -> np.ndarray:
-        """[one-hot region | capability/10 | memory/512] per node (paper §3:
-        v_0 = {'Beijing', 8.6, 152} embedded into vector space)."""
+    def with_telemetry(self, telemetry: NodeTelemetry | None) -> "ClusterGraph":
+        """Same fleet, new observed signals (None detaches them)."""
+        return ClusterGraph(self.machines, self.latency, telemetry)
+
+    def node_features(self, version: int = 1) -> np.ndarray:
+        """Per-node feature matrix (paper §3: v_0 = {'Beijing', 8.6, 152}
+        embedded into vector space). v1 is the static machine description;
+        v2 appends the observed telemetry columns (module docstring)."""
         n_r = len(REGIONS)
-        feats = np.zeros((self.n, n_r + 2), np.float32)
+        feats = np.zeros((self.n, feature_dim(version)), np.float32)
         for i, m in enumerate(self.machines):
             feats[i, _R[m.region]] = 1.0
             feats[i, n_r] = m.capability / 10.0
             feats[i, n_r + 1] = m.memory_gb / 512.0
+        if version >= 2:
+            tel = self.telemetry or NodeTelemetry.clean(self.n)
+            feats[:, n_r + 2] = (tel.slowdown - 1.0) / SLOWDOWN_SCALE
+            feats[:, n_r + 3] = tel.jitter_sigma
+            feats[:, n_r + 4] = tel.relay_hub
         return feats
 
     def adjacency_mask(self) -> np.ndarray:
@@ -160,7 +252,8 @@ class ClusterGraph:
             if np.isnan(w):
                 w = 0.0
             lat[n, j] = lat[j, n] = w
-        return ClusterGraph(self.machines + [machine], lat)
+        tel = self.telemetry.extended() if self.telemetry is not None else None
+        return ClusterGraph(self.machines + [machine], lat, tel)
 
     def remove_machines(self, ids: Sequence[int]) -> "ClusterGraph":
         """Scalability/disaster recovery: drop nodes (remove edge info)."""
@@ -169,8 +262,9 @@ class ClusterGraph:
 
     def subgraph(self, ids: Sequence[int]) -> "ClusterGraph":
         ids = list(ids)
+        tel = self.telemetry.subset(ids) if self.telemetry is not None else None
         return ClusterGraph([self.machines[i] for i in ids],
-                            self.latency[np.ix_(ids, ids)].copy())
+                            self.latency[np.ix_(ids, ids)].copy(), tel)
 
 
 def _latency_matrix(machines: list[Machine], rng: np.random.Generator) -> np.ndarray:

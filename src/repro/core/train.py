@@ -24,6 +24,18 @@ Fast paths (the planner hot loop — see README "Performance"):
   graph-step. Ragged datasets fall back to per-bucket stacking; ``joint``
   mode instead vmaps the masked loss across graphs and takes one Adam step
   per epoch on the mean loss.
+
+Label provenance and the feature-version shim:
+
+* ``make_dataset(label_mode=...)`` selects the supervision source:
+  ``"analytic"`` (default, the closed-form oracle — bit-identical to the
+  historical labeler) or ``"sim"`` (simulator-refined labels paired with
+  v2 telemetry features; see ``core.labels`` and docs/ARCHITECTURE.md).
+* ``predict`` / ``predict_logits`` derive the node-feature schema from the
+  *loaded params* (``gnn.d_in_of`` -> ``graph.version_for_dim``), so
+  checkpoints are self-describing: a v1 checkpoint keeps seeing v1
+  features even on a telemetry-carrying graph, and a v2 checkpoint gets
+  its telemetry columns without the caller specifying anything.
 """
 from __future__ import annotations
 
@@ -40,7 +52,7 @@ import numpy as np
 from repro.core import gnn
 from repro.core import cost_model as cm
 from repro.core import labels as labels_mod
-from repro.core.graph import ClusterGraph, random_fleet
+from repro.core.graph import ClusterGraph, random_fleet, version_for_dim
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 
 # Benchmark switch (benchmarks/plan_bench.py): turning ``bucketed_predict``
@@ -65,19 +77,55 @@ class GraphExample:
 
 
 def make_example(graph: ClusterGraph, tasks: Sequence[cm.ModelTask],
-                 seed: int = 0, label_frac: float = 1.0) -> GraphExample:
-    lab = labels_mod.oracle_labels(graph, tasks, seed=seed)
+                 seed: int = 0, label_frac: float = 1.0,
+                 label_mode: str = "analytic", jitter=None, traffic=None,
+                 comm_model: str = "alphabeta",
+                 feature_version: int | None = None) -> GraphExample:
+    """One supervised example. Label provenance (``label_mode``):
+
+    * ``"analytic"`` (default) — ``labels.oracle_labels``, the closed-form
+      cost-model partition; features default to v1 (the paper's static
+      machine description). Bit-identical to the historical behaviour.
+    * ``"sim"`` — ``labels.sim_refined_labels``: the analytic partition
+      refined by local search on *simulated* makespan under ``jitter`` /
+      ``traffic``; features default to v2 with the simulator's observed
+      telemetry (slowdowns, jitter sigma, relay hubs) attached, so the GNN
+      sees the same signals the labels respond to.
+    """
+    if label_mode not in ("analytic", "sim"):
+        raise ValueError(f"unknown label_mode {label_mode!r}")
+    if feature_version is None:
+        feature_version = 2 if label_mode == "sim" else 1
+    if label_mode == "sim":
+        from repro.sim.evaluate import observed_telemetry
+        graph = graph.with_telemetry(observed_telemetry(
+            graph, jitter=jitter, seed=seed, comm_model=comm_model))
+        lab = labels_mod.sim_refined_labels(
+            graph, tasks, seed=seed, jitter=jitter, traffic=traffic,
+            comm_model=comm_model)
+    else:
+        lab = labels_mod.oracle_labels(graph, tasks, seed=seed)
     mask = labels_mod.sparse_mask(graph.n, label_frac, seed)
-    return GraphExample(graph.node_features(), graph.latency.astype(np.float32),
-                        lab, mask)
+    return GraphExample(graph.node_features(feature_version),
+                        graph.latency.astype(np.float32), lab, mask)
 
 
 def make_dataset(n_graphs: int, tasks: Sequence[cm.ModelTask], n_nodes: int = 24,
-                 seed: int = 0, label_frac: float = 0.7) -> list[GraphExample]:
+                 seed: int = 0, label_frac: float = 0.7,
+                 label_mode: str = "analytic", jitter=None, traffic=None,
+                 comm_model: str = "alphabeta",
+                 feature_version: int | None = None) -> list[GraphExample]:
+    """Random-fleet training set. ``label_mode="sim"`` selects sim-refined
+    labels + v2 telemetry features (see ``make_example``); the default stays
+    the analytic oracle with v1 features."""
     out = []
     for g in range(n_graphs):
         fleet = random_fleet(n_nodes, seed=seed + g)
-        out.append(make_example(fleet, tasks, seed=seed + g, label_frac=label_frac))
+        out.append(make_example(fleet, tasks, seed=seed + g,
+                                label_frac=label_frac, label_mode=label_mode,
+                                jitter=jitter, traffic=traffic,
+                                comm_model=comm_model,
+                                feature_version=feature_version))
     return out
 
 
@@ -111,8 +159,10 @@ def _bucketed_forward(cfg: gnn.GNNConfig, bucket: int, d_in: int):
     return jax.jit(fwd)
 
 
-def _pad_graph(graph: ClusterGraph) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    feats = graph.node_features()
+def _pad_graph(graph: ClusterGraph,
+               feature_version: int = 1) -> tuple[np.ndarray, np.ndarray,
+                                                  np.ndarray]:
+    feats = graph.node_features(feature_version)
     lat = graph.latency.astype(np.float32)
     n, d = feats.shape
     b = bucket_for(n)
@@ -127,13 +177,19 @@ def _pad_graph(graph: ClusterGraph) -> tuple[np.ndarray, np.ndarray, np.ndarray]
 
 def predict_logits(params, cfg: gnn.GNNConfig, graph: ClusterGraph, *,
                    bucketed: bool | None = None) -> np.ndarray:
+    """Logits for every node. The feature-version shim lives here: the
+    feature schema is derived from the *params* (``gnn.d_in_of`` →
+    ``graph.version_for_dim``), so a v1 checkpoint keeps seeing v1 features
+    after the v2 telemetry columns were added — checkpoints are
+    self-describing and old ones load unchanged."""
+    version = version_for_dim(gnn.d_in_of(params))
     if bucketed is None:
         bucketed = FLAGS["bucketed_predict"]
     if not bucketed:  # legacy eager path, kept for before/after benchmarks
         return np.asarray(gnn.apply(params, cfg,
-                                    jnp.asarray(graph.node_features()),
+                                    jnp.asarray(graph.node_features(version)),
                                     jnp.asarray(graph.latency.astype(np.float32))))
-    feats, lat, node_mask = _pad_graph(graph)
+    feats, lat, node_mask = _pad_graph(graph, version)
     fwd = _bucketed_forward(cfg, node_mask.shape[0], feats.shape[1])
     logits = fwd(params, feats, lat, node_mask)
     return np.asarray(logits[:graph.n])

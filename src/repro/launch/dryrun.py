@@ -189,7 +189,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, knobs: dict,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
+    # cost_analysis() is a dict on current jax but a one-element list of
+    # dicts on older releases; normalize both (and None) to a dict
     xla_cost = compiled.cost_analysis() or {}
+    if isinstance(xla_cost, (list, tuple)):
+        xla_cost = xla_cost[0] if xla_cost else {}
     hlo = compiled.as_text()
     if save_hlo:
         with open(save_hlo, "w") as f:

@@ -77,6 +77,22 @@ class ElasticRuntime:
     def group_of(self, task_name: str) -> list[int]:
         return self.assignment.groups.get(task_name, [])
 
+    def commit_assignment(self, assignment: assign_mod.Assignment,
+                          graph: Optional[ClusterGraph] = None,
+                          reason: str = "refine") -> None:
+        """Install an externally produced assignment (e.g. the simulator-in-
+        the-loop polish of ``sim.evaluate.HulkPlacer``) — and optionally a
+        graph with refreshed observed telemetry — through the runtime's own
+        state transition: the epoch bumps and the change is logged, so
+        consumers of ``log``/``epoch`` never see a placement that was
+        silently swapped underneath them."""
+        self.state = _State(graph=graph if graph is not None else self.graph,
+                            assignment=assignment,
+                            epoch=self.state.epoch + 1)
+        self.log.append({"event": reason, "groups": dict(assignment.groups),
+                         "deferred": list(assignment.deferred),
+                         "epoch": self.state.epoch})
+
     # -- events ---------------------------------------------------------------
     def on_failure(self, event: FailureEvent) -> dict:
         """Drop failed machines, re-plan affected tasks only. Returns a

@@ -49,6 +49,17 @@ class ComputeModel:
     def stragglers(self) -> list[int]:
         return [int(i) for i in np.nonzero(self.slow_factor > 1.0)[0]]
 
+    def telemetry(self) -> tuple[np.ndarray, np.ndarray]:
+        """(slowdown, jitter_sigma) per machine — the compute half of the
+        observed signals fed back into v2 ``ClusterGraph`` node features
+        (``sim.evaluate.observed_telemetry``). The slowdown is the persistent
+        straggler multiplier a production fleet would measure from step-time
+        telemetry; sigma is the configured per-op jitter every machine
+        shares under this model."""
+        sigma = np.full(len(self.slow_factor), float(self.jitter.sigma),
+                        np.float32)
+        return self.slow_factor.astype(np.float32).copy(), sigma
+
     def add_machine(self, machine) -> int:
         """The fleet grew (autoscale provisioning): track the new machine.
         Joined machines are never retroactive stragglers — the straggler

@@ -10,6 +10,22 @@ the new placement), and reports per-task step times plus the makespan.
 ``evaluate_scenario`` / ``evaluate_all`` run Hulk and Systems A/B/C (the
 ``core.baselines`` strategies) across the scenario registry and emit the
 comparison table the benchmark harness prints.
+
+Simulator-in-the-loop placement (``label_mode``)
+------------------------------------------------
+``observed_telemetry`` exports what the simulator *measures* about a fleet —
+persistent per-machine slowdowns and jitter (``sim.compute``), relay-hub
+membership (``sim.network``) — as a ``core.graph.NodeTelemetry``, the bridge
+that feeds simulator signals back into GNN features.
+
+``evaluate_scenario(..., label_mode="sim")`` closes the training loop the
+ROADMAP names: the Hulk GNN is trained on *sim-refined* labels
+(``core.labels.sim_refined_labels``, supervision that has watched candidate
+partitions run under the scenario's straggler/jitter config) with v2
+telemetry features, and at placement time the scenario fleet carries its
+observed telemetry so the GNN can see which machines are actually slow.
+``label_mode="analytic"`` (default) is the historical, closed-form-labeled
+path — bit-identical to before the sim-label work landed.
 """
 from __future__ import annotations
 
@@ -23,7 +39,7 @@ from repro.core import assign as assign_mod
 from repro.core import cost_model as cm
 from repro.core import placement as placement_mod
 from repro.core import train as gnn_train
-from repro.core.graph import ClusterGraph
+from repro.core.graph import ClusterGraph, NodeTelemetry
 from repro.runtime import ElasticRuntime, FailureEvent
 from repro.sim import scenarios as sc
 from repro.sim.compute import ComputeModel, JitterConfig
@@ -88,18 +104,59 @@ class HulkPlacer:
     """GNN task assignment via ``core.assign``; per-group parallelism chosen
     by ``core.placement.plan_runtime`` (DP gradient sync vs pipeline
     activations, whichever moves fewer bytes over the slow links); fault
-    re-planning delegated to ``runtime.elastic.ElasticRuntime``."""
+    re-planning delegated to ``runtime.elastic.ElasticRuntime``.
+
+    ``sim_refine=True`` adds the simulator-in-the-loop step: every
+    assignment (initial and post-failure) is polished by
+    ``core.labels.sim_local_search`` on *simulated* makespan under the
+    scenario's ``jitter``/``traffic`` — the same objective the evaluation
+    measures — before it is committed. This is how observed stragglers that
+    the GNN's proposal missed still get evicted from pipeline groups."""
 
     name = "Hulk"
 
     def __init__(self, tasks: Sequence[cm.ModelTask], params, cfg,
-                 comm_model: str = "alphabeta", use_runtime_plan: bool = True):
+                 comm_model: str = "alphabeta", use_runtime_plan: bool = True,
+                 sim_refine: bool = False,
+                 jitter: Optional[JitterConfig] = None,
+                 traffic: Optional[sc.TrafficBuilder] = None,
+                 refine_iters: int = 24, seed: int = 0):
         self.tasks = list(tasks)
         self.params = params
         self.cfg = cfg
         self.comm_model = comm_model
         self.use_runtime_plan = use_runtime_plan
+        self.sim_refine = sim_refine
+        self.jitter = jitter
+        self.traffic = traffic
+        self.refine_iters = refine_iters
+        self.seed = seed
         self.rt: Optional[ElasticRuntime] = None
+
+    def _refined(self, graph: ClusterGraph,
+                 assignment: assign_mod.Assignment) -> assign_mod.Assignment:
+        """Local-search the assignment on simulated makespan (deferred
+        tasks make every labeling infeasible, so the search cannot change
+        anything and is skipped)."""
+        from repro.core import labels as labels_mod
+
+        if assignment.deferred:
+            return assignment
+        idle = len(self.tasks)
+        lab = np.full(graph.n, idle, np.int64)
+        for ti, task in enumerate(self.tasks):
+            for i in assignment.groups.get(task.name, []):
+                lab[i] = ti
+        lab = labels_mod.sim_local_search(
+            graph, lab, self.tasks, iters=self.refine_iters, seed=self.seed,
+            jitter=self.jitter, traffic=self.traffic,
+            comm_model=self.comm_model)
+        groups = {task.name: [int(j) for j in np.flatnonzero(lab == ti)]
+                  for ti, task in enumerate(self.tasks)}
+        stage_order = {name: cm.greedy_chain_order(graph, ids)
+                       for name, ids in groups.items()}
+        return assign_mod.Assignment(groups=groups, deferred=[],
+                                     stage_order=stage_order)
 
     def _placements(self, graph: ClusterGraph,
                     assignment: assign_mod.Assignment) -> dict[str, Placement]:
@@ -126,12 +183,33 @@ class HulkPlacer:
             out[name] = Placement(list(ids), strategy, list(order))
         return out
 
+    def _commit_refined(self) -> None:
+        """Sim-refine the runtime's current assignment and commit it (with
+        refreshed observed telemetry — the straggler draw is a function of
+        fleet size, so after machines leave, the pre-failure telemetry
+        would describe the wrong machines) through
+        ``ElasticRuntime.commit_assignment``. No-op without ``sim_refine``."""
+        if not self.sim_refine:
+            return
+        graph = self.rt.graph
+        if graph.telemetry is not None:
+            graph = graph.with_telemetry(observed_telemetry(
+                graph, jitter=self.jitter, seed=self.seed,
+                comm_model=self.comm_model))
+        refined = self._refined(graph, self.rt.assignment)
+        if (refined.groups != self.rt.assignment.groups
+                or graph is not self.rt.graph):
+            self.rt.commit_assignment(refined, graph=graph,
+                                      reason="sim_refine")
+
     def place(self, graph: ClusterGraph) -> dict[str, Placement]:
         self.rt = ElasticRuntime(graph, self.tasks, self.params, self.cfg)
+        self._commit_refined()
         return self._placements(self.rt.graph, self.rt.assignment)
 
     def on_failure(self, failed_ids: Sequence[int], at_step: int):
         self.rt.on_failure(FailureEvent(list(failed_ids), at_step))
+        self._commit_refined()
         return self.rt.graph, self._placements(self.rt.graph,
                                                self.rt.assignment)
 
@@ -263,7 +341,16 @@ class FleetSimulation:
                  if r.finish_time is None and not r.failed]
         if not alive:
             return  # nothing left to disrupt (run over or capacity exhausted)
-        pool = sorted({i for pl in self.placements.values() for i in pl.ids})
+        # Preemptions strike the fleet uniformly — idle spares included, not
+        # just assigned machines (Systems A/B/C occupy the whole fleet, so
+        # their draws are unchanged). A kill that lands on a spare still
+        # aborts the in-flight steps (the epoch bump and model rebuild are
+        # fleet-wide), but it preserves the placement: recover() re-plans no
+        # group, no pipeline loses capacity, and the restarted steps run at
+        # full speed — so a disaster-recovery spare pool (the paper idles
+        # 7/46 nodes for exactly this) softens faults instead of being
+        # invisible to them.
+        pool = list(range(self.graph.n))
         if len(pool) <= 1:
             return
         rng = np.random.default_rng((self.seed, 0xFA17, k))
@@ -342,6 +429,23 @@ class FleetSimulation:
 
 
 # ---------------------------------------------------------------------------
+# Telemetry export: what the simulator observed about a fleet, packaged for
+# v2 node features (the "feeding back" hook).
+# ---------------------------------------------------------------------------
+def observed_telemetry(graph: ClusterGraph, jitter: Optional[JitterConfig] = None,
+                       seed: int = 0,
+                       comm_model: str = "alphabeta") -> NodeTelemetry:
+    """Per-machine signals a simulation of ``graph`` under ``jitter`` would
+    observe: the persistent straggler slowdown and jitter sigma from
+    ``ComputeModel`` (the same seeded draw ``FleetSimulation`` uses) and
+    relay-hub membership from ``NetworkModel``'s routed topology. Attach
+    with ``graph.with_telemetry(...)`` to expose them as v2 node features."""
+    slowdown, sigma = ComputeModel(graph, jitter, seed=seed).telemetry()
+    hubs = NetworkModel(graph, comm_model).relay_hubs()
+    return NodeTelemetry(slowdown, sigma, hubs)
+
+
+# ---------------------------------------------------------------------------
 # Convenience entry points
 # ---------------------------------------------------------------------------
 def simulate_single(graph: ClusterGraph, ids: Sequence[int],
@@ -361,30 +465,77 @@ def simulate_single(graph: ClusterGraph, ids: Sequence[int],
 _GNN_CACHE: dict = {}
 
 
-def trained_gnn(tasks: Sequence[cm.ModelTask], seed: int = 0):
-    """Train (and cache) the Hulk placement GNN for a task set."""
-    key = (tuple(t.name for t in tasks), seed)
+def trained_gnn(tasks: Sequence[cm.ModelTask], seed: int = 0,
+                label_mode: str = "analytic",
+                jitter: Optional[JitterConfig] = None,
+                traffic: Optional[sc.TrafficBuilder] = None,
+                comm_model: str = "alphabeta"):
+    """Train (and cache) the Hulk placement GNN for a task set.
+
+    ``label_mode="analytic"`` (default) trains on the closed-form oracle
+    labels with v1 features — the historical configuration, unchanged.
+    ``label_mode="sim"`` trains on sim-refined labels under the scenario's
+    ``jitter`` / ``traffic`` / ``comm_model`` with v2 telemetry features
+    (``core.train.make_dataset(label_mode="sim")``); sim-label runs use a
+    larger dataset + epoch budget because the task — route around observed
+    stragglers and contention, not just latency — is harder."""
+    # analytic labels ignore the sim-environment knobs: normalize them out
+    # of the key so every scenario shares the one analytic GNN (the
+    # historical behaviour). Sim-label keys carry all of them — traffic
+    # builders hash by identity, which is stable within a process.
+    if label_mode == "sim":
+        key = (tuple(t.name for t in tasks), seed, label_mode, jitter,
+               traffic, comm_model)
+    else:
+        key = (tuple(t.name for t in tasks), seed, label_mode)
     if key not in _GNN_CACHE:
         cfg = gnn_train.gnn_config_for(tasks)
-        ds = gnn_train.make_dataset(3, tasks, n_nodes=12, seed=seed + 11,
-                                    label_frac=0.8)
-        # default joint mode: one update/epoch over 3 graphs (~3x the old
-        # sequential epoch count)
-        params, _ = gnn_train.train_gnn(cfg, ds, steps=50, lr=0.01, seed=seed)
+        if label_mode == "sim":
+            ds = gnn_train.make_dataset(6, tasks, n_nodes=12, seed=seed + 11,
+                                        label_frac=0.9, label_mode="sim",
+                                        jitter=jitter, traffic=traffic,
+                                        comm_model=comm_model)
+            params, _ = gnn_train.train_gnn(cfg, ds, steps=120, lr=0.01,
+                                            seed=seed)
+        else:
+            ds = gnn_train.make_dataset(3, tasks, n_nodes=12, seed=seed + 11,
+                                        label_frac=0.8)
+            # default joint mode: one update/epoch over 3 graphs (~3x the old
+            # sequential epoch count)
+            params, _ = gnn_train.train_gnn(cfg, ds, steps=50, lr=0.01,
+                                            seed=seed)
         _GNN_CACHE[key] = (params, cfg)
     return _GNN_CACHE[key]
 
 
-def evaluate_scenario(scenario: sc.Scenario, seed: int = 0) -> dict:
+def evaluate_scenario(scenario: sc.Scenario, seed: int = 0,
+                      label_mode: str = "analytic") -> dict:
     """Score Hulk and Systems A/B/C on one scenario. Returns
-    {system: metrics} plus the Hulk improvement vs the best baseline."""
+    {system: metrics} plus the Hulk improvement vs the best baseline.
+
+    ``label_mode="sim"`` swaps in the simulator-in-the-loop Hulk: GNN
+    trained on sim-refined labels (see ``trained_gnn``) and a scenario
+    fleet carrying its observed telemetry, so placement can react to the
+    stragglers/hubs the simulation will actually contain. Baselines are
+    unaffected (they ignore features)."""
     graph = scenario.fleet(seed)
     tasks = list(scenario.tasks)
-    params, cfg = trained_gnn(tasks, seed=0)
+    params, cfg = trained_gnn(tasks, seed=0, label_mode=label_mode,
+                              jitter=scenario.jitter,
+                              traffic=scenario.traffic,
+                              comm_model=scenario.comm_model)
+    hulk_graph = graph
+    if label_mode == "sim":
+        hulk_graph = graph.with_telemetry(observed_telemetry(
+            graph, jitter=scenario.jitter, seed=seed,
+            comm_model=scenario.comm_model))
 
     systems: list[tuple[str, object, bool]] = [
         ("Hulk", HulkPlacer(tasks, params, cfg,
-                            comm_model=scenario.comm_model), True),
+                            comm_model=scenario.comm_model,
+                            sim_refine=(label_mode == "sim"),
+                            jitter=scenario.jitter, traffic=scenario.traffic,
+                            seed=seed), True),
         ("SystemA", FullFleetPlacer("dp", tasks, "SystemA"), False),
         ("SystemB", FullFleetPlacer("gpipe", tasks, "SystemB"), False),
         ("SystemC", FullFleetPlacer("tp", tasks, "SystemC"), False),
@@ -393,7 +544,8 @@ def evaluate_scenario(scenario: sc.Scenario, seed: int = 0) -> dict:
     for name, placer, concurrent in systems:
         try:
             res = FleetSimulation(
-                graph, tasks, placer, comm_model=scenario.comm_model,
+                hulk_graph if name == "Hulk" else graph, tasks, placer,
+                comm_model=scenario.comm_model,
                 jitter=scenario.jitter, traffic=scenario.traffic,
                 fault_fracs=scenario.fault_fracs,
                 kills_per_fault=scenario.kills_per_fault,

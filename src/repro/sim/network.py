@@ -196,6 +196,24 @@ class NetworkModel:
     def reachable(self, i: int, j: int) -> bool:
         return i == j or self.routed_ms[i, j] > 0
 
+    def relay_hubs(self) -> np.ndarray:
+        """(n,) float mask of nodes that forward traffic for other pairs —
+        i.e. appear as an intermediate hop on some routed shortest path
+        (policy-blocked pairs relay through them, making them contended
+        shared resources). This is the network half of the observed
+        telemetry fed back into v2 node features.
+
+        A node k is an intermediate hop iff ``next_hop[i, j] == k`` for some
+        pair with ``k != j``: every interior node of a path is the first hop
+        of its own suffix, so scanning the next-hop matrix finds them all.
+        """
+        n = self.graph.n
+        nh = self._next_hop
+        inner = (nh >= 0) & (nh != np.arange(n)[None, :])
+        mask = np.zeros(n, np.float32)
+        mask[np.unique(nh[inner])] = 1.0
+        return mask
+
     def _route(self, i: int, j: int) -> Optional[tuple]:
         """(links, link_a, link_b, per-link bw) of the routed i->j path; None
         when unreachable. Reconstructed lazily from the next-hop matrix and

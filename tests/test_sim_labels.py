@@ -1,0 +1,176 @@
+"""Simulator-in-the-loop labels + versioned telemetry features.
+
+Covers the three acceptance properties of the sim-label work:
+* ``label_mode="analytic"`` is bit-identical to the historical labeler;
+* the sim-driven local search (production, memoized) matches its readable
+  reference; sim-refined labels don't lose to analytic ones on simulated
+  makespan;
+* versioned features round-trip through checkpoint save/load (the shim
+  derives the feature schema from the loaded params), and sim-labeled Hulk
+  beats System B on ``straggler_heavy`` (the known analytic-label loss).
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import gnn, labels as labels_mod, train as gnn_train
+from repro.core.graph import (ClusterGraph, NodeTelemetry, feature_dim,
+                              random_fleet, version_for_dim)
+from repro.sim.compute import ComputeModel, JitterConfig
+from repro.sim.evaluate import evaluate_scenario, observed_telemetry
+from repro.sim.network import NetworkModel
+from repro.sim.scenarios import SIM_TASKS, blocked_fleet, get_scenario
+
+JIT = JitterConfig(sigma=0.3, straggler_frac=0.25, straggler_slowdown=3.0)
+TASKS = list(SIM_TASKS)
+
+
+# ---------------------------------------------------------------------------
+# Label provenance: analytic mode is bit-identical to the historical path
+# ---------------------------------------------------------------------------
+def test_analytic_label_mode_bit_identical():
+    g = random_fleet(10, seed=3)
+    legacy_labels = labels_mod.oracle_labels(g, TASKS, seed=3)
+    default = gnn_train.make_example(g, TASKS, seed=3, label_frac=0.8)
+    explicit = gnn_train.make_example(g, TASKS, seed=3, label_frac=0.8,
+                                      label_mode="analytic")
+    assert np.array_equal(default.labels, legacy_labels)
+    assert np.array_equal(default.labels, explicit.labels)
+    assert np.array_equal(default.feats, explicit.feats)
+    assert default.feats.shape[1] == feature_dim(1)  # v1 features, unchanged
+
+
+def test_make_example_rejects_unknown_mode():
+    g = random_fleet(8, seed=0)
+    with pytest.raises(ValueError):
+        gnn_train.make_example(g, TASKS, label_mode="psychic")
+
+
+# ---------------------------------------------------------------------------
+# Sim-driven local search: fast path == reference, and it helps
+# ---------------------------------------------------------------------------
+def test_sim_local_search_matches_reference():
+    g = random_fleet(8, seed=1)
+    start = labels_mod.oracle_labels(g, TASKS, seed=1)
+    kw = dict(iters=12, seed=1, jitter=JIT)
+    fast = labels_mod.sim_local_search(g, start, TASKS, **kw)
+    ref = labels_mod.sim_local_search_reference(g, start, TASKS, **kw)
+    assert np.array_equal(fast, ref)
+
+
+def test_sim_refined_labels_improve_simulated_makespan():
+    g = random_fleet(10, seed=0)
+    analytic = labels_mod.oracle_labels(g, TASKS, seed=0)
+    refined = labels_mod.sim_refined_labels(g, TASKS, seed=0, jitter=JIT)
+    ms_a = labels_mod.simulated_makespan(g, analytic, TASKS, jitter=JIT,
+                                         seed=0)
+    ms_r = labels_mod.simulated_makespan(g, refined, TASKS, jitter=JIT,
+                                         seed=0)
+    assert math.isfinite(ms_r)
+    assert ms_r <= ms_a
+    # the 3x stragglers should not sit in the big task's pipeline group
+    slow = ComputeModel(g, JIT, seed=0).stragglers()
+    assert slow, "scenario config must draw stragglers"
+    big = np.flatnonzero(refined == 0)
+    assert not set(slow) <= set(big.tolist())
+
+
+def test_simulated_makespan_infeasible_is_inf():
+    g = random_fleet(6, seed=0)
+    empty_group = np.full(g.n, labels_mod.idle_class(TASKS), np.int64)
+    assert labels_mod.simulated_makespan(g, empty_group, TASKS) == np.inf
+
+
+# ---------------------------------------------------------------------------
+# Telemetry plumbing + versioned features
+# ---------------------------------------------------------------------------
+def test_observed_telemetry_matches_sim_models():
+    g = random_fleet(9, seed=2)
+    tel = observed_telemetry(g, jitter=JIT, seed=2)
+    model = ComputeModel(g, JIT, seed=2)
+    assert np.array_equal(tel.slowdown, model.slow_factor.astype(np.float32))
+    assert np.all(tel.jitter_sigma == np.float32(JIT.sigma))
+    assert tel.relay_hub.shape == (g.n,)
+
+
+def test_relay_hubs_found_on_blocked_fleet():
+    g = blocked_fleet(seed=0)
+    hubs = NetworkModel(g, "alphabeta").relay_hubs()
+    # London (id 4) relays all China<->Europe traffic in this fleet
+    assert hubs[4] == 1.0
+
+
+def test_feature_versions_and_telemetry_threading():
+    g = random_fleet(7, seed=4)
+    v1 = g.node_features()
+    v2_clean = g.node_features(2)
+    assert v1.shape[1] == feature_dim(1)
+    assert v2_clean.shape[1] == feature_dim(2)
+    # v2 of an unobserved fleet is v1 plus zero telemetry columns
+    assert np.array_equal(v2_clean[:, :feature_dim(1)], v1)
+    assert np.all(v2_clean[:, feature_dim(1):] == 0.0)
+    assert version_for_dim(v1.shape[1]) == 1
+    assert version_for_dim(v2_clean.shape[1]) == 2
+    with pytest.raises(ValueError):
+        version_for_dim(999)
+
+    tel = observed_telemetry(g, jitter=JIT, seed=4)
+    gt = g.with_telemetry(tel)
+    v2 = gt.node_features(2)
+    assert np.any(v2[:, feature_dim(1)] > 0.0)  # stragglers visible
+    # structural ops keep telemetry aligned
+    sub = gt.subgraph([1, 3, 5])
+    assert np.array_equal(sub.telemetry.slowdown, tel.slowdown[[1, 3, 5]])
+    grown = gt.add_machine(gt.machines[0])
+    assert grown.telemetry.slowdown.shape == (g.n + 1,)
+    assert grown.telemetry.slowdown[-1] == 1.0  # joiner starts unobserved
+
+
+def test_feature_version_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    g = random_fleet(8, seed=5).with_telemetry(
+        observed_telemetry(random_fleet(8, seed=5), jitter=JIT, seed=5))
+    cfg = gnn_train.gnn_config_for(TASKS)
+    for version in (1, 2):
+        params = gnn.init(jax.random.PRNGKey(version), cfg,
+                          feature_dim(version))
+        assert gnn.d_in_of(params) == feature_dim(version)
+        mgr = CheckpointManager(str(tmp_path / f"v{version}"), keep_k=1)
+        mgr.save(0, params, extra={"feature_version": version})
+        step, restored, meta = mgr.restore_latest(params)
+        assert meta["extra"]["feature_version"] == version
+        assert gnn.d_in_of(restored) == feature_dim(version)
+        # the shim routes each checkpoint to its own feature schema
+        before = gnn_train.predict_logits(params, cfg, g)
+        after = gnn_train.predict_logits(restored, cfg, g)
+        np.testing.assert_array_equal(before, after)
+
+
+def test_v1_params_ignore_telemetry():
+    """Old checkpoints see v1 features: attaching telemetry to the graph
+    must not change their predictions (backward compatibility)."""
+    g = random_fleet(8, seed=6)
+    cfg = gnn_train.gnn_config_for(TASKS)
+    params = gnn.init(jax.random.PRNGKey(0), cfg, feature_dim(1))
+    plain = gnn_train.predict_logits(params, cfg, g)
+    observed = gnn_train.predict_logits(
+        params, cfg, g.with_telemetry(observed_telemetry(g, jitter=JIT)))
+    np.testing.assert_array_equal(plain, observed)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: the straggler_heavy loss flips under sim labels
+# ---------------------------------------------------------------------------
+def test_sim_labeled_hulk_beats_system_b_on_straggler_heavy():
+    scn = get_scenario("straggler_heavy")
+    row = evaluate_scenario(scn, seed=0, label_mode="sim")
+    hulk = row["Hulk"]["makespan_s"]
+    system_b = row["SystemB"]["makespan_s"]
+    assert math.isfinite(hulk)
+    assert hulk <= system_b, (
+        f"sim-labeled Hulk ({hulk:.1f}s) must beat System B "
+        f"({system_b:.1f}s) on straggler_heavy")
