@@ -1,0 +1,75 @@
+"""Provenance stamp for every emitted BENCH_*.json.
+
+A benchmark number with no record of what produced it is unreviewable: six
+months later nobody can say which commit, seed, or solver mode a cell came
+from. ``stamp(res, seed=..., solver_mode=...)`` attaches a ``provenance``
+block to a result dict right before it is dumped:
+
+    {"git_sha": "...", "seed": 0, "timestamp": "2026-08-08T12:00:00Z",
+     "jax_version": "0.4.x", "solver_mode": "fast+reference",
+     "config_hash": "a1b2c3d4e5f6"}
+
+``config_hash`` is the first 12 hex chars of the sha256 over the result's
+own ``config`` block (canonical JSON), so two artifacts claiming the same
+configuration can be compared by a string equality instead of a field-wise
+diff. The wall-clock timestamp is allowed HERE and only here — trace files
+(``repro.obs``) must stay byte-identical across same-seed runs, so they
+never carry one; benchmark artifacts are wall-clock measurements already.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import subprocess
+import time
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def git_sha() -> str:
+    """HEAD commit of the repo the benchmark ran from; "unknown" outside a
+    checkout (e.g. an unpacked source tarball)."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=_REPO_ROOT,
+                             capture_output=True, text=True, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def jax_version() -> str:
+    try:
+        import jax
+        return jax.__version__
+    except Exception:
+        return "unavailable"
+
+
+def config_hash(config) -> str:
+    """12-hex-char digest of a config mapping (canonical JSON, so key order
+    and whitespace don't matter)."""
+    blob = json.dumps(config, sort_keys=True, separators=(",", ":"),
+                      default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def provenance(seed=None, solver_mode=None, config=None) -> dict:
+    return {
+        "git_sha": git_sha(),
+        "seed": seed,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "jax_version": jax_version(),
+        "solver_mode": solver_mode,
+        "config_hash": config_hash(config if config is not None else {}),
+    }
+
+
+def stamp(res: dict, seed=None, solver_mode=None) -> dict:
+    """Attach the provenance block to a benchmark result, in place. The
+    config hashed is the result's own ``config`` block when present."""
+    res["provenance"] = provenance(seed=seed, solver_mode=solver_mode,
+                                   config=res.get("config"))
+    return res

@@ -210,6 +210,8 @@ def run_fleet_bench(serve_grid=SERVE_GRID, train_grid=TRAIN_GRID,
     res["derived"] = (f"accept_speedup={accept_speedup:.1f}x "
                       f"@n={accept_cell[0]}/r={accept_cell[1]} "
                       f"cells={len(serve_rows) + len(train_rows)}")
+    from benchmarks._provenance import stamp
+    stamp(res, seed=seed, solver_mode="fast+reference")
     print(res["table"], file=sys.stderr)
     with open(out_path, "w") as f:
         json.dump(res, f, indent=1, default=float)

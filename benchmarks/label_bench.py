@@ -92,9 +92,12 @@ def run_label_bench(names=None, seed: int = 0) -> dict:
                  if not (r["hulk_sim_s"]
                          <= r["hulk_analytic_s"] * (1 + REGRESSION_TOL))]
     wins = sum(r["hulk_sim_s"] < r["hulk_analytic_s"] for r in rows.values())
-    return {
+    from benchmarks._provenance import stamp
+    return stamp({
         "artifact": "label_comparison",
         "host": platform.node(),
+        "config": {"seed": seed, "scenarios": names,
+                   "regression_tol": REGRESSION_TOL},
         "scenarios": rows,
         "straggler_flip": flips,
         "regressed": regressed,
@@ -102,7 +105,7 @@ def run_label_bench(names=None, seed: int = 0) -> dict:
         "deterministic": all(r["deterministic"] for r in rows.values()),
         "derived": (f"{len(rows)} scenarios sim_wins={wins} "
                     f"straggler_flip={flips} regressed={len(regressed)}"),
-    }
+    }, seed=seed, solver_mode="fast")
 
 
 def check_result(res: dict, smoke: bool = False) -> None:

@@ -211,6 +211,8 @@ def run_plan_bench(sizes=SIZES, train_graphs=64, train_nodes=16, steps=15,
     res["derived"] = (f"n={biggest} speedup="
                       f"{res['planner'][biggest]['speedup_train_assign']:.1f}x "
                       f"train_tput={res['training_throughput']['speedup']:.1f}x")
+    from benchmarks._provenance import stamp
+    stamp(res, seed=0, solver_mode="fast")
     with open(out_path, "w") as f:
         json.dump(res, f, indent=1, default=float)
     return res

@@ -170,6 +170,8 @@ def run_serve_bench(time_scale: float = 1.0, include_measured: bool = True,
                if r.get("hulk_vs_nearest", {}).get("hulk_beats_nearest"))
     res["derived"] = (f"calib_err={res['calibration']['rel_error']:.1e} "
                       f"hulk_beats_nearest={wins}/{len(res['scenarios'])}")
+    from benchmarks._provenance import stamp
+    stamp(res, seed=seed, solver_mode="fast")
     with open(out_path, "w") as f:
         json.dump(res, f, indent=1, default=float)
     return res

@@ -41,6 +41,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core import cost_model as cm
 from repro.core.graph import ClusterGraph
 
@@ -250,11 +251,14 @@ def sim_local_search(graph: ClusterGraph, labels: np.ndarray,
     mem = graph.memory_gb()
     idle = idle_class(tasks)
     cache: dict[bytes, float] = {}
+    rec = obs_mod.current()
+    metrics = rec.metrics  # counting only — never steers the search
 
     def cost(lab: np.ndarray) -> float:
         key = lab.tobytes()
         hit = cache.get(key)
         if hit is None:
+            metrics.inc("plan.sim_search.sims")
             hit = cache[key] = simulated_makespan(
                 graph, lab, tasks, jitter=jitter, traffic=traffic,
                 comm_model=comm_model, seed=seed, steps=steps)
@@ -277,11 +281,13 @@ def sim_local_search(graph: ClusterGraph, labels: np.ndarray,
             for new in [idle] + [t for t in range(len(tasks)) if t != old]:
                 if new == old or not donor_ok(i, old):
                     continue
+                metrics.inc("plan.sim_search.proposals")
                 labels[i] = new
                 nxt = cost(labels)
                 if nxt < cur:
                     cur = nxt
                     old = new
+                    metrics.inc("plan.sim_search.accepts")
                 else:
                     labels[i] = old
     for _ in range(iters):
@@ -290,12 +296,16 @@ def sim_local_search(graph: ClusterGraph, labels: np.ndarray,
         new = int(rng.integers(0, len(tasks) + 1))  # idle allowed
         if new == old or not donor_ok(i, old):
             continue
+        metrics.inc("plan.sim_search.proposals")
         labels[i] = new
         nxt = cost(labels)
         if nxt < cur:
             cur = nxt
+            metrics.inc("plan.sim_search.accepts")
         else:
             labels[i] = old
+    if rec.enabled:
+        rec.metrics.gauge("plan.sim_search.makespan_s", cur)
     return labels
 
 

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core import gnn
 from repro.core import cost_model as cm
 from repro.core import labels as labels_mod
@@ -191,7 +192,21 @@ def predict_logits(params, cfg: gnn.GNNConfig, graph: ClusterGraph, *,
                                     jnp.asarray(graph.latency.astype(np.float32))))
     feats, lat, node_mask = _pad_graph(graph, version)
     fwd = _bucketed_forward(cfg, node_mask.shape[0], feats.shape[1])
-    logits = fwd(params, feats, lat, node_mask)
+    rec = obs_mod.current()
+    if rec.enabled:
+        # compiles are observable as trace-count deltas around the call —
+        # the traced closure bumps _TRACE_COUNTS only while jax is tracing
+        b = node_mask.shape[0]
+        before = _TRACE_COUNTS[(cfg, b)]
+        logits = fwd(params, feats, lat, node_mask)
+        compiled = _TRACE_COUNTS[(cfg, b)] - before
+        rec.metrics.inc(f"plan.jit.bucket{b}.calls")
+        if compiled:
+            rec.metrics.inc(f"plan.jit.bucket{b}.compiles", compiled)
+        else:
+            rec.metrics.inc(f"plan.jit.bucket{b}.cache_hits")
+    else:
+        logits = fwd(params, feats, lat, node_mask)
     return np.asarray(logits[:graph.n])
 
 

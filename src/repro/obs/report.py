@@ -1,0 +1,100 @@
+"""Human-readable run summary from a recorded trace + metrics snapshot.
+
+``render(recorder)`` turns one run's flight-recorder state into the text
+report ``examples/trace_run.py`` prints: a per-lane table (event/span counts,
+recorded busy time) and the metrics registry (counters, gauges, histogram
+quantiles). Purely derived — rendering never mutates the recorder.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+def _fmt_s(us: int) -> str:
+    return f"{us / 1e6:.3f}s"
+
+
+def lane_table(trace_doc: dict) -> str:
+    """lane | spans | async | instants | busy(sum of recorded span time)."""
+    names = {ev["pid"]: ev["args"]["name"] for ev in trace_doc["traceEvents"]
+             if ev["ph"] == "M" and ev["name"] == "process_name"}
+    rows: dict[int, dict] = {}
+    opens: dict[tuple, int] = {}
+    for ev in trace_doc["traceEvents"]:
+        ph = ev["ph"]
+        if ph == "M":
+            continue
+        r = rows.setdefault(ev["pid"], {"spans": 0, "async": 0, "instants": 0,
+                                        "counters": 0, "busy_us": 0})
+        if ph == "X":
+            r["spans"] += 1
+            r["busy_us"] += ev.get("dur", 0)
+        elif ph == "b":
+            r["async"] += 1
+            opens[(ev["pid"], ev.get("cat"), ev["id"], ev["name"])] = ev["ts"]
+        elif ph == "e":
+            t0 = opens.pop((ev["pid"], ev.get("cat"), ev["id"], ev["name"]),
+                           None)
+            if t0 is not None:
+                r["busy_us"] += max(0, ev["ts"] - t0)
+        elif ph == "i":
+            r["instants"] += 1
+        elif ph == "C":
+            r["counters"] += 1
+    head = (f"{'lane':<24}{'spans':>8}{'async':>8}{'instants':>10}"
+            f"{'busy':>12}")
+    lines = [head, "-" * len(head)]
+    for pid in sorted(rows):
+        r = rows[pid]
+        lines.append(f"{names.get(pid, f'pid{pid}'):<24}{r['spans']:>8}"
+                     f"{r['async']:>8}{r['instants']:>10}"
+                     f"{_fmt_s(r['busy_us']):>12}")
+    return "\n".join(lines)
+
+
+def metrics_table(snapshot: dict, top: Optional[int] = None) -> str:
+    lines = []
+    counters = snapshot.get("counters", {})
+    if counters:
+        lines.append(f"{'counter':<44}{'value':>12}")
+        lines.append("-" * 56)
+        items = sorted(counters.items(), key=lambda kv: (-kv[1], kv[0]))
+        if top:
+            items = items[:top]
+        for k, v in items:
+            lines.append(f"{k:<44}{v:>12}")
+    gauges = snapshot.get("gauges", {})
+    if gauges:
+        lines.append("")
+        lines.append(f"{'gauge':<44}{'value':>12}")
+        lines.append("-" * 56)
+        for k in sorted(gauges):
+            lines.append(f"{k:<44}{gauges[k]:>12.4g}")
+    hists = snapshot.get("histograms", {})
+    if hists:
+        lines.append("")
+        lines.append(f"{'histogram':<36}{'count':>8}{'p50':>10}{'p95':>10}"
+                     f"{'p99':>10}")
+        lines.append("-" * 74)
+        for k in sorted(hists):
+            h = hists[k]
+            lines.append(f"{k:<36}{h['count']:>8}{h['p50']:>10.4g}"
+                         f"{h['p95']:>10.4g}{h['p99']:>10.4g}")
+    return "\n".join(lines) if lines else "(no metrics recorded)"
+
+
+def render(recorder, title: str = "run") -> str:
+    """The full report for an enabled ``obs.Recorder``."""
+    doc = recorder.trace.to_chrome()
+    n_ev = len([e for e in doc["traceEvents"] if e["ph"] != "M"])
+    parts = [
+        f"== obs report: {title} ==",
+        f"trace events: {n_ev} recorded"
+        + (f" ({recorder.trace.n_emitted} emitted, ring-buffered)"
+           if doc["metadata"]["truncated"] else ""),
+        "",
+        lane_table(doc),
+        "",
+        metrics_table(recorder.metrics.snapshot()),
+    ]
+    return "\n".join(parts)

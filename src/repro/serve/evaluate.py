@@ -41,6 +41,7 @@ class ServeResult:
     scale_events: int
     final_replicas: list[int]
     replicas: list[dict]
+    metrics: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -77,7 +78,8 @@ def summarize(raw: dict, slo_s: float) -> ServeResult:
         bytes_moved=raw["bytes_moved"],
         scale_events=len(raw["scale_log"]),
         final_replicas=raw["final_replicas"],
-        replicas=raw["replicas"])
+        replicas=raw["replicas"],
+        metrics=dict(raw.get("metrics", {})))
 
 
 def serve_gnn(model, n_replicas: int, seed: int = 0):
@@ -88,7 +90,8 @@ def serve_gnn(model, n_replicas: int, seed: int = 0):
 
 
 def run_serve(scenario: sc.ServeScenario, policy: str, seed: int = 0,
-              trace: Optional[list] = None) -> tuple[ServeResult, dict]:
+              trace: Optional[list] = None,
+              obs=None) -> tuple[ServeResult, dict]:
     graph = scenario.fleet(seed)
     if trace is None:
         trace = traffic_mod.generate(scenario.traffic(graph), seed=seed)
@@ -102,7 +105,7 @@ def run_serve(scenario: sc.ServeScenario, policy: str, seed: int = 0,
         prefill_chunk=scenario.prefill_chunk,
         autoscale=scenario.autoscale, spares=scenario.spares,
         fault_fracs=scenario.fault_fracs,
-        kills_per_fault=scenario.kills_per_fault, seed=seed).run()
+        kills_per_fault=scenario.kills_per_fault, seed=seed, obs=obs).run()
     return summarize(raw, scenario.slo_s), raw
 
 

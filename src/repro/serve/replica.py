@@ -37,6 +37,7 @@ import collections
 import dataclasses
 from typing import Callable, Optional
 
+from repro import obs as obs_mod
 from repro.serve.costs import ServeModel
 from repro.serve.traffic import Request
 from repro.sim.compute import ComputeModel
@@ -67,7 +68,8 @@ class Replica:
     def __init__(self, sim: Simulator, compute: ComputeModel, machine_id: int,
                  model: ServeModel, memory_gb: float, *, max_batch: int = 8,
                  prefill_chunk: int = 256, name: str | None = None,
-                 reference_backlog: bool = False):
+                 reference_backlog: bool = False, obs=None):
+        self._obs = obs if obs is not None else obs_mod.NULL
         self.sim = sim
         self.compute = compute
         self.machine = int(machine_id)
@@ -211,6 +213,10 @@ class Replica:
             self.running.remove(s)
             self.kv_used -= s.kv_tokens
             s.t_done = self.sim.now
+        if self._obs.enabled:
+            self._obs.metrics.inc("replica.iterations")
+            if done:
+                self._record_done(done)
         # continue the batch inline — the deferred (zero-delay-event) start
         # is only needed on the idle->busy edge, where it lets a same-tick
         # burst of submits share the first batch; a replica mid-stream
@@ -222,6 +228,31 @@ class Replica:
         if self._idle_cb is not None and not self.running and not self.queue:
             cb, self._idle_cb = self._idle_cb, None
             cb()
+
+    def _record_done(self, done: list[Seq]) -> None:
+        """Emit the request lifecycle spans (queued -> prefill -> decode ->
+        done) for each completed sequence on this replica's lane. All four
+        timestamps were recorded on the ``Seq`` as the engine fired them, so
+        emitting retroactively at completion keeps the hot iteration loop
+        free of tracing branches; async spans, because a batch completes many
+        overlapping sequences on one lane."""
+        trace = self._obs.trace
+        metrics = self._obs.metrics
+        track = f"replica/{self.machine}"
+        for s in done:
+            sid = f"r{s.req.rid}"
+            first = s.t_first_token if s.t_first_token is not None else s.t_done
+            trace.async_span(track, "queued", sid, s.t_enqueue, s.t_admit,
+                             cat="request", args={"rid": s.req.rid})
+            trace.async_span(track, "prefill", sid, s.t_admit, first,
+                             cat="request",
+                             args={"tokens": s.req.prompt_tokens})
+            trace.async_span(track, "decode", sid, first, s.t_done,
+                             cat="request",
+                             args={"tokens": s.req.gen_tokens})
+            metrics.inc("replica.seqs_completed")
+            metrics.observe("serve.queue_wait_s", s.t_admit - s.t_enqueue)
+            metrics.observe("serve.service_s", s.t_done - s.t_admit)
 
     # -- lifecycle -----------------------------------------------------------
     def drain(self) -> list[Request]:

@@ -16,6 +16,7 @@ from repro.sim.compute import ComputeModel, JitterConfig
 from repro.sim.engine import Simulator
 from repro.sim.evaluate import (FleetSimulation, SimResult, comparison_table,
                                 evaluate_all, evaluate_scenario,
+                                observed_telemetry, observed_telemetry_live,
                                 simulate_single)
 from repro.sim.network import NetworkModel
 from repro.sim.scenarios import (SCENARIOS, SERVE_SCENARIOS, Scenario,
@@ -31,4 +32,5 @@ __all__ = [
     "get_serve_scenario", "ServeExecutor",
     "FleetSimulation", "SimResult", "simulate_single",
     "evaluate_scenario", "evaluate_all", "comparison_table",
+    "observed_telemetry", "observed_telemetry_live",
 ]

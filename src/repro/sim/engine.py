@@ -11,9 +11,10 @@ fault-triggered re-plan aborts all in-flight work without unwinding the heap.
 from __future__ import annotations
 
 import heapq
-import itertools
 import math
 from typing import Any, Callable, Optional
+
+from repro import obs as obs_mod
 
 
 class Event:
@@ -37,12 +38,27 @@ class Event:
 
 
 class Simulator:
-    def __init__(self):
+    def __init__(self, obs=None):
         self.now: float = 0.0
         self.epoch: int = 0
         self.n_fired: int = 0
         self._heap: list[tuple[float, int, Event]] = []
-        self._seq = itertools.count()
+        self._seq: int = 0
+        self.obs = obs if obs is not None else obs_mod.NULL
+        self.obs.bind_clock(lambda: self.now)
+
+    @property
+    def events_dispatched(self) -> int:
+        """Events fired so far — the public face of the heap's sequence
+        accounting (callers must not poke ``_heap`` / ``_seq`` directly)."""
+        return self.n_fired
+
+    @property
+    def events_scheduled(self) -> int:
+        """Events ever pushed, fired or not: the heap's (time, seq) sequence
+        counter. ``events_scheduled - events_dispatched`` bounds the pending
+        + cancelled/stale backlog."""
+        return self._seq
 
     def schedule(self, delay: float, fn: Callable, *args: Any,
                  pin_epoch: bool = True) -> Event:
@@ -53,7 +69,9 @@ class Simulator:
         if not (delay >= 0.0) or math.isinf(delay):
             raise ValueError(f"bad event delay: {delay!r}")
         ev = Event(fn, args, self.epoch if pin_epoch else -1)
-        heapq.heappush(self._heap, (self.now + delay, next(self._seq), ev))
+        seq = self._seq
+        self._seq = seq + 1
+        heapq.heappush(self._heap, (self.now + delay, seq, ev))
         return ev
 
     def bump_epoch(self) -> int:
@@ -62,7 +80,13 @@ class Simulator:
         return self.epoch
 
     def run(self, until: float = math.inf, max_events: int = 20_000_000) -> float:
-        """Drain the heap (up to ``until``); returns the final sim time."""
+        """Drain the heap (up to ``until``); returns the final sim time.
+
+        The traced variant is a separate loop so the disabled path stays the
+        exact historical hot loop — zero per-event observability cost beyond
+        this one check per ``run()`` call."""
+        if self.obs.enabled:
+            return self._run_traced(until, max_events)
         heap = self._heap
         pop = heapq.heappop
         while heap:
@@ -76,6 +100,38 @@ class Simulator:
             self.n_fired += 1
             if self.n_fired > max_events:
                 raise RuntimeError(f"simulation exceeded {max_events} events")
+            ev.fn(*ev.args)
+        return self.now
+
+    def _run_traced(self, until: float, max_events: int) -> float:
+        """The instrumented run loop: a dispatch span per fired event (sim
+        time does not advance inside a callback, so spans record *what fired
+        when*, ordered by the heap's (time, seq) tuples), dropped-event
+        counters, and a periodically sampled heap-depth counter track."""
+        heap = self._heap
+        pop = heapq.heappop
+        trace = self.obs.trace
+        metrics = self.obs.metrics
+        while heap:
+            t = heap[0][0]
+            if t > until:
+                break
+            _, _, ev = pop(heap)
+            if ev.cancelled or (ev.epoch >= 0 and ev.epoch != self.epoch):
+                metrics.inc("engine.events_dropped")
+                continue
+            self.now = t
+            self.n_fired += 1
+            if self.n_fired > max_events:
+                raise RuntimeError(f"simulation exceeded {max_events} events")
+            metrics.inc("engine.events_dispatched")
+            depth = len(heap) + 1
+            metrics.gauge_max("engine.heap_depth_max", depth)
+            if self.n_fired % 64 == 1:   # sampled on the event count:
+                trace.counter("engine/heap", "heap_depth", depth)  # deterministic
+            trace.span_at("engine/dispatch", getattr(ev.fn, "__qualname__",
+                                                     "callback"),
+                          t, t, cat="engine")
             ev.fn(*ev.args)
         return self.now
 

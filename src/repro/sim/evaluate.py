@@ -35,6 +35,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core import assign as assign_mod
 from repro.core import cost_model as cm
 from repro.core import placement as placement_mod
@@ -239,6 +240,7 @@ class SimResult:
     n_events: int
     bytes_moved: float
     stragglers: list[int]
+    metrics: dict = dataclasses.field(default_factory=dict)
 
     def mean_step_s(self, task: str) -> float:
         ts = self.per_task[task]["step_times"]
@@ -253,7 +255,7 @@ class FleetSimulation:
                  fault_fracs: Sequence[float] = (),
                  kills_per_fault: int = 1,
                  steps: int = 3, seed: int = 0, concurrent: bool = True,
-                 net_solver: str = "fast"):
+                 net_solver: str = "fast", obs=None):
         self.graph = graph
         self.tasks = list(tasks)
         self.placer = placer
@@ -267,7 +269,8 @@ class FleetSimulation:
         self.seed = seed
         self.concurrent = concurrent
 
-        self.sim = Simulator()
+        self.obs = obs if obs is not None else obs_mod.NULL
+        self.sim = Simulator(obs=self.obs)
         self.placements: dict[str, Placement] = {}
         self.runs = {t.name: _TaskRun(task=t) for t in self.tasks}
         self.replans: list[dict] = []
@@ -295,7 +298,7 @@ class FleetSimulation:
         scale = self.traffic(self.graph, horizon) if self.traffic else None
         self.net = NetworkModel(self.graph, self.comm_model,
                                 capacity_scale=scale,
-                                solver=self.net_solver)
+                                solver=self.net_solver, obs=self.obs)
         self.compute = ComputeModel(self.graph, self.jitter, seed=self.seed)
         self._comm = cm.make_comm(self.graph, self.comm_model)
         self._stragglers = self.compute.stragglers()
@@ -319,6 +322,16 @@ class FleetSimulation:
             run.compute_s += comp_s
             run.comm_s += comm_s
             run.steps_done += 1
+            if self.obs.enabled:
+                # steps on one task are strictly sequential, so a complete
+                # (X) span per step is safe on the task's lane
+                self.obs.trace.span_at(
+                    f"task/{name}", f"step{run.steps_done - 1}",
+                    t_start, self.sim.now, cat="train",
+                    args={"compute_s": comp_s, "comm_s": comm_s})
+                self.obs.metrics.inc("sim.steps_done")
+                self.obs.metrics.observe("sim.step_s",
+                                         self.sim.now - t_start)
             if run.steps_done >= self.steps:
                 self._task_over(name, failed=False)
             else:
@@ -418,14 +431,23 @@ class FleetSimulation:
             finishes.append(math.inf if run.failed or run.finish_time is None
                             else run.finish_time)
         makespan = max(finishes) if finishes else math.inf
+        metrics = {
+            "engine.events_dispatched": self.sim.events_dispatched,
+            "engine.events_scheduled": self.sim.events_scheduled,
+            "net.solver.solves": self.net.n_solves,
+            "net.bytes_moved": float(self._bytes_retired
+                                     + self.net.bytes_moved),
+        }
+        if self.obs.enabled:
+            metrics.update(self.obs.metrics.flat())
         return SimResult(
             system=getattr(self.placer, "name", "?"),
             per_task=per_task, makespan=float(makespan),
             compute_s=float(sum(r.compute_s for r in self.runs.values())),
             comm_s=float(sum(r.comm_s for r in self.runs.values())),
-            replans=list(self.replans), n_events=self.sim.n_fired,
+            replans=list(self.replans), n_events=self.sim.events_dispatched,
             bytes_moved=float(self._bytes_retired + self.net.bytes_moved),
-            stragglers=list(self._stragglers))
+            stragglers=list(self._stragglers), metrics=metrics)
 
 
 # ---------------------------------------------------------------------------
@@ -440,8 +462,38 @@ def observed_telemetry(graph: ClusterGraph, jitter: Optional[JitterConfig] = Non
     ``ComputeModel`` (the same seeded draw ``FleetSimulation`` uses) and
     relay-hub membership from ``NetworkModel``'s routed topology. Attach
     with ``graph.with_telemetry(...)`` to expose them as v2 node features."""
+    if graph.n == 0:
+        # an empty fleet has nothing to observe; constructing the models
+        # just to read zero rows would trip their n>=1 assumptions
+        return NodeTelemetry.clean(0)
     slowdown, sigma = ComputeModel(graph, jitter, seed=seed).telemetry()
     hubs = NetworkModel(graph, comm_model).relay_hubs()
+    return NodeTelemetry(slowdown, sigma, hubs)
+
+
+def observed_telemetry_live(net: NetworkModel,
+                            compute: ComputeModel) -> NodeTelemetry:
+    """Telemetry from *live* models mid-run, rather than a fresh seeded
+    draw: machines that joined after t=0 (``add_machine``) carry the clean
+    rows the models appended for them, and machines that are gone — dead in
+    ``compute.alive`` or tombstoned out of the network — are zeroed
+    (slowdown forced to the healthy 1.0, sigma/hub to 0), because a
+    deprovisioned machine produces no telemetry and must not be fed to the
+    GNN as a straggler. Relay hubs come from the network's current routed
+    topology, so tombstones also stop conferring hub membership."""
+    slowdown, sigma = compute.telemetry()
+    n = len(slowdown)
+    hubs = np.asarray(net.relay_hubs(), np.float32)
+    if len(hubs) < n:      # network built before machines joined
+        hubs = np.append(hubs, np.zeros(n - len(hubs), np.float32))
+    hubs = hubs[:n].copy()
+    gone = ~compute.alive[:n]
+    for mid in net.tombstoned:
+        if mid < n:
+            gone[mid] = True
+    slowdown[gone] = 1.0
+    sigma[gone] = 0.0
+    hubs[gone] = 0.0
     return NodeTelemetry(slowdown, sigma, hubs)
 
 
@@ -559,6 +611,7 @@ def evaluate_scenario(scenario: sc.Scenario, seed: int = 0,
                                  if d["failed"]),
                 "mean_step_s": {t: d["mean_step_s"]
                                 for t, d in res.per_task.items()},
+                "metrics": res.metrics,
             }
         except assign_mod.PlacementError as e:
             rows[name] = {"makespan_s": math.inf, "error": str(e)}

@@ -58,6 +58,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core import cost_model as cm
 from repro.core.graph import ClusterGraph
 from repro.sim.engine import Event, Simulator
@@ -161,11 +162,12 @@ class _Flow:
 class NetworkModel:
     def __init__(self, graph: ClusterGraph, comm_model: str = "alphabeta",
                  capacity_scale: Optional[Callable[[int, float], float]] = None,
-                 solver: str = "fast"):
+                 solver: str = "fast", obs=None):
         if comm_model not in ("alphabeta", "paper"):
             raise ValueError(f"unknown comm model {comm_model!r}")
         if solver not in ("fast", "reference"):
             raise ValueError(f"unknown solver {solver!r}")
+        self._obs = obs if obs is not None else obs_mod.NULL
         self.graph = graph
         self.comm_model = comm_model
         self.capacity_scale = capacity_scale
@@ -184,6 +186,7 @@ class NetworkModel:
         self._tick_ev: Optional[Event] = None
         self.bytes_moved: float = 0.0
         self.n_solves: int = 0        # rebalance solves (both solvers)
+        self._span_seq = 0            # trace-span ids (enabled mode only)
 
     # -- static queries ------------------------------------------------------
     def latency_s(self, i: int, j: int) -> float:
@@ -247,6 +250,8 @@ class NetworkModel:
         route = self._route(i, j)
         if route is None:
             raise UnreachableError(f"no route between machines {i} and {j}")
+        if self._obs.enabled:
+            done_cb = self._traced_done(sim, i, j, nbytes, done_cb)
         self.bytes_moved += float(nbytes)
         # Links are full-duplex: each direction is its own resource, so the
         # two opposing hops of a 2-node all-reduce ring don't contend — which
@@ -259,6 +264,29 @@ class NetworkModel:
                      done_cb=done_cb)
         # latency phase first; the flow holds no link capacity while in flight
         sim.schedule(self.latency_s(i, j), self._start_flow, sim, flow)
+
+    def _traced_done(self, sim: Simulator, i: int, j: int, nbytes: float,
+                     done_cb: Callable[[], None]) -> Callable[[], None]:
+        """Observability wrapper around a transfer's completion: an async
+        span on the source machine's lane covering request -> completion
+        (async, because a machine's outbound flows overlap) plus transfer
+        counters. Built only when recording is enabled."""
+        trace = self._obs.trace
+        metrics = self._obs.metrics
+        metrics.inc("net.transfers")
+        metrics.observe("net.transfer_bytes", float(nbytes),
+                        buckets=obs_mod.BYTES_BUCKETS)
+        t0 = sim.now
+        sid = self._span_seq
+        self._span_seq = sid + 1
+
+        def done() -> None:
+            trace.async_span(f"machine/{i}", f"xfer->{j}", f"f{sid}", t0,
+                             sim.now, cat="net",
+                             args={"bytes": float(nbytes), "dst": j})
+            metrics.observe("net.transfer_s", sim.now - t0)
+            done_cb()
+        return done
 
     def _start_flow(self, sim: Simulator, flow: _Flow) -> None:
         flow.last_update = sim.now
@@ -317,12 +345,20 @@ class NetworkModel:
     def _request_solve(self, sim: Simulator) -> None:
         """Coalesce: all rebalance requests at one timestamp share ONE solve,
         scheduled zero-delay so it runs after every same-time flow event."""
+        if self._obs.enabled:
+            # requests vs solves = the coalescing ratio (N same-tick flow
+            # events -> 1 solve); a per-call guard, zero-cost when disabled
+            self._obs.metrics.inc("net.solver.solve_requests")
         if self._solve_ev is None:
             self._solve_ev = sim.schedule(0.0, self._solve, sim)
 
     def _solve(self, sim: Simulator) -> None:
         self._solve_ev = None
         self.n_solves += 1
+        obs_on = self._obs.enabled
+        if obs_on:
+            n_dirty = (len(self._flows_on_link) if self._dirty_all
+                       else len(self._dirty))
         now = sim.now
         # 1. affected set: flows sharing a dirty link (their fair share may
         #    have changed); everyone else keeps rate AND finish event.
@@ -374,10 +410,26 @@ class NetworkModel:
         #    below a few dozen flows). Either way a flow whose rate did not
         #    change keeps its pending finish event.
         flows = list(survivors.values())
+        if obs_on:
+            old_rates = [f.rate for f in flows]
         if len(flows) >= 24:
             self._rate_vectorized(sim, flows, now)
         elif flows:
             self._rate_scalar(sim, flows, now)
+        if obs_on:
+            m = self._obs.metrics
+            m.inc("net.solver.solves")
+            m.inc("net.solver.affected_flows", len(flows))
+            m.inc("net.solver.finished_flows", len(finished))
+            m.inc("net.solver.rate_changes",
+                  sum(1 for f, r in zip(flows, old_rates) if f.rate != r))
+            # fraction of occupied links whose counts changed this solve —
+            # how much re-rating work the dirty-set tracking avoided
+            total_links = max(1, len(self._flows_on_link) + len(finished))
+            m.observe("net.solver.dirty_link_fraction",
+                      min(1.0, n_dirty / total_links))
+            self._obs.trace.counter("net/flows", "active_flows",
+                                    len(self._active))
         # completion callbacks only schedule new events, never mutate the
         # active set synchronously, so firing them last is safe
         finished.sort(key=lambda f: f.fid)
@@ -445,6 +497,12 @@ class NetworkModel:
         completion. O(flows x path length) per call — the original
         implementation the vectorized solver is tested against."""
         self.n_solves += 1
+        if self._obs.enabled:
+            m = self._obs.metrics
+            m.inc("net.solver.solves")
+            m.inc("net.solver.affected_flows", len(self._active))
+            self._obs.trace.counter("net/flows", "active_flows",
+                                    len(self._active))
         now = sim.now
         # 1. bank progress at the old rates; retire flows that just drained
         #    BEFORE computing shares, so they stop occupying their links

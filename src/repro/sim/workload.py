@@ -54,6 +54,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core import cost_model as cm
 from repro.core.graph import ClusterGraph, Machine
 from repro.sim.compute import ComputeModel, JitterConfig
@@ -259,11 +260,12 @@ class ServeExecutor:
                  autoscale=None, spares: Sequence[Machine] = (),
                  fault_fracs: Sequence[float] = (), kills_per_fault: int = 1,
                  seed: int = 0, run_until_s: Optional[float] = None,
-                 data_plane: str = "fast"):
+                 data_plane: str = "fast", obs=None):
         from repro.serve.autoscale import Autoscaler
         from repro.serve.replica import Replica
         from repro.serve.router import HulkPlacement, Router, StaticPlacement
 
+        self.obs = obs if obs is not None else obs_mod.NULL
         self.graph = graph
         self.model = model
         self.trace = list(trace)
@@ -277,8 +279,9 @@ class ServeExecutor:
         if data_plane not in ("fast", "reference"):
             raise ValueError(f"unknown data plane {data_plane!r}")
         self.data_plane = data_plane
-        self.sim = Simulator()
-        self.net = NetworkModel(graph, comm_model, solver=data_plane)
+        self.sim = Simulator(obs=self.obs)
+        self.net = NetworkModel(graph, comm_model, solver=data_plane,
+                                obs=self.obs)
         self.compute = ComputeModel(graph, jitter, seed=seed)
 
         if policy == "hulk":
@@ -342,7 +345,7 @@ class ServeExecutor:
         self.replicas[mid] = self._Replica(
             self.sim, self.compute, mid, self.model, mem,
             max_batch=self.max_batch, prefill_chunk=self.prefill_chunk,
-            reference_backlog=self.data_plane == "reference")
+            reference_backlog=self.data_plane == "reference", obs=self.obs)
         self._routing_changed()
 
     def _cold_start(self, mid: int) -> None:
@@ -357,8 +360,18 @@ class ServeExecutor:
         src = min(peers, key=lambda m: float(self.net.routed_ms[m, mid])) \
             if peers else mid
         self._provisioning.add(mid)
+        t_cs = self.sim.now
 
         def up() -> None:
+            if self.obs.enabled:
+                self.obs.trace.async_span(
+                    f"replica/{mid}", "cold_start", f"cs{mid}", t_cs,
+                    self.sim.now, cat="serve",
+                    args={"src": src,
+                          "bytes": float(self.model.weight_bytes)})
+                self.obs.metrics.inc("serve.cold_starts")
+                self.obs.metrics.observe("serve.cold_start_s",
+                                         self.sim.now - t_cs)
             self._provisioning.discard(mid)
             if mid in self._cancelled_starts:
                 self._cancelled_starts.discard(mid)
@@ -469,19 +482,36 @@ class ServeExecutor:
 
     # -- request flow --------------------------------------------------------
     def _on_arrival(self, req) -> None:
+        if self.obs.enabled:
+            self.obs.metrics.inc("serve.requests")
         self._route(req)
+
+    def _drop(self, rec) -> None:
+        rec.dropped = True
+        if self.obs.enabled:
+            self.obs.metrics.inc("serve.dropped")
+            self.obs.trace.instant("requests", "dropped", cat="request",
+                                   args={"rid": rec.req.rid,
+                                         "n_routes": rec.n_routes})
 
     def _route(self, req) -> None:
         rec = self.records[req.rid]
         if rec.dropped or rec.t_complete is not None:
             return
         if rec.n_routes >= self.MAX_ROUTES:
-            rec.dropped = True
+            self._drop(rec)
             return
         rep = self.router.pick(req, self._replica_list())
         if rep is None:
-            rec.dropped = True
+            self._drop(rec)
             return
+        if rec.n_routes > 0 and self.obs.enabled:
+            # failover edge: this request already ran (or queued) elsewhere
+            self.obs.metrics.inc("serve.failovers")
+            self.obs.trace.instant("requests", "failover", cat="request",
+                                   args={"rid": req.rid,
+                                         "to_machine": rep.machine,
+                                         "attempt": rec.n_routes + 1})
         rec.n_routes += 1
         rec.machines.append(rep.machine)
         src = self.router.entry(req.region)
@@ -502,7 +532,7 @@ class ServeExecutor:
             # the response's only relay was deprovisioned mid-generation:
             # the reply is lost (the request path is guarded at pick time,
             # but a sequence admitted before the tombstone can finish after)
-            self.records[req.rid].dropped = True
+            self._drop(self.records[req.rid])
             return
         nbytes = req.gen_tokens * self.model.response_bytes_per_token
         self.net.transfer(self.sim, machine, dst,
@@ -513,6 +543,21 @@ class ServeExecutor:
         rec.t_complete = self.sim.now
         rec.latency_s = self.sim.now - req.t_arrival
         rec.t_first_token = seq.t_first_token
+        if self.obs.enabled:
+            m = self.obs.metrics
+            m.inc("serve.completed")
+            m.observe("serve.latency_s", rec.latency_s)
+            if seq.t_first_token is not None:
+                m.observe("serve.ttft_s", seq.t_first_token - req.t_arrival)
+            # end-to-end request span on the fleet-wide requests lane
+            # (replica-side queued/prefill/decode phases live on the
+            # replica lanes — see serve.replica)
+            self.obs.trace.async_span(
+                "requests", "request", f"r{req.rid}", req.t_arrival,
+                self.sim.now, cat="request",
+                args={"rid": req.rid, "region": req.region,
+                      "machines": list(rec.machines),
+                      "n_routes": rec.n_routes})
         if self.autoscaler is not None and rec.latency_s is not None:
             self.autoscaler.observe_completion(rec.latency_s)
 
@@ -530,13 +575,24 @@ class ServeExecutor:
         if self.autoscaler is not None:
             self.autoscaler.stop()
         all_reps = list(self.replicas.values()) + self.retired
+        # metrics snapshot: the cheap core counters always; the full obs
+        # registry (flattened) when a recorder was attached
+        metrics = {
+            "engine.events_dispatched": self.sim.events_dispatched,
+            "engine.events_scheduled": self.sim.events_scheduled,
+            "net.solver.solves": self.net.n_solves,
+            "net.bytes_moved": float(self.net.bytes_moved),
+        }
+        if self.obs.enabled:
+            metrics.update(self.obs.metrics.flat())
         return {
             "policy": self.policy,
             "records": self.records,
             "horizon_s": self.horizon,
             "end_s": self.sim.now,
-            "n_events": self.sim.n_fired,
+            "n_events": self.sim.events_dispatched,
             "bytes_moved": self.net.bytes_moved,
+            "metrics": metrics,
             "replicas": [r.stats() for r in all_reps],
             "scale_log": list(self.scale_log),
             "autoscale_log": (list(self.autoscaler.log)

@@ -20,7 +20,8 @@ from repro.core import gnn, labels as labels_mod, train as gnn_train
 from repro.core.graph import (ClusterGraph, NodeTelemetry, feature_dim,
                               random_fleet, version_for_dim)
 from repro.sim.compute import ComputeModel, JitterConfig
-from repro.sim.evaluate import evaluate_scenario, observed_telemetry
+from repro.sim.evaluate import (evaluate_scenario, observed_telemetry,
+                                observed_telemetry_live)
 from repro.sim.network import NetworkModel
 from repro.sim.scenarios import SIM_TASKS, blocked_fleet, get_scenario
 
@@ -160,6 +161,60 @@ def test_v1_params_ignore_telemetry():
     observed = gnn_train.predict_logits(
         params, cfg, g.with_telemetry(observed_telemetry(g, jitter=JIT)))
     np.testing.assert_array_equal(plain, observed)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry edge cases: empty fleets, mid-run joiners, tombstones
+# ---------------------------------------------------------------------------
+def test_observed_telemetry_empty_fleet():
+    g = ClusterGraph([], np.zeros((0, 0), np.float32))
+    tel = observed_telemetry(g, jitter=JIT, seed=0)
+    assert tel.slowdown.shape == (0,)
+    assert tel.jitter_sigma.shape == (0,)
+    assert tel.relay_hub.shape == (0,)
+
+
+def test_observed_telemetry_live_machine_joined_mid_run():
+    g = random_fleet(8, seed=2)
+    compute = ComputeModel(g, JIT, seed=2)
+    net = NetworkModel(g)
+    grown = g.add_machine(g.machines[0])
+    compute.add_machine(grown.machines[-1])
+    net.add_machine(grown)
+    tel = observed_telemetry_live(net, compute)
+    assert tel.slowdown.shape == (9,)
+    # joiners are never retroactive stragglers: they get a clean row
+    assert tel.slowdown[-1] == 1.0
+    assert tel.jitter_sigma[-1] == np.float32(JIT.sigma)
+    # hub membership comes from the *live* routed topology, so the hub
+    # column covers the joiner too (it may legitimately relay traffic)
+    assert tel.relay_hub.shape == (9,)
+    # the initial fleet's straggler draw is still visible, unshifted
+    assert (set(np.flatnonzero(tel.slowdown > 1.0))
+            == set(compute.stragglers()))
+
+
+def test_observed_telemetry_live_excludes_tombstoned_machines():
+    g = random_fleet(8, seed=2)
+    compute = ComputeModel(g, JIT, seed=2)
+    net = NetworkModel(g)
+    slow = compute.stragglers()
+    assert slow, "scenario config must draw stragglers"
+    victim = slow[0]
+    net.remove_machine(victim)          # network-side tombstone
+    dead = (victim + 1) % g.n
+    compute.remove_machine(dead)        # compute-side deprovision
+    tel = observed_telemetry_live(net, compute)
+    # gone machines produce no telemetry: healthy slowdown, zero sigma/hub,
+    # even though `victim` is a straggler in the underlying model
+    for mid in (victim, dead):
+        assert tel.slowdown[mid] == 1.0
+        assert tel.jitter_sigma[mid] == 0.0
+        assert tel.relay_hub[mid] == 0.0
+    alive = [i for i in range(g.n) if i not in (victim, dead)]
+    assert np.array_equal(tel.slowdown[alive],
+                          compute.slow_factor[alive].astype(np.float32))
+    assert np.all(tel.jitter_sigma[alive] == np.float32(JIT.sigma))
 
 
 # ---------------------------------------------------------------------------
