@@ -1,0 +1,262 @@
+"""Chaos benchmark: resilient serving vs naive reroute under fault suites.
+
+Drives the serving executor over the paper's Fig. 1 fleet through three
+declarative fault suites (``sim.faults``), comparing two serving stacks on
+identical traffic (same seed, same trace, anycast-nearest routing — the
+CDN default both stacks share, so the delta is purely the resilience
+layer):
+
+* ``naive``     — the bare failover path: a request whose replica dies is
+  re-routed, nothing else (no timeouts, no hedging, no ejection);
+* ``resilient`` — retry with per-attempt timeouts + exponential backoff,
+  hedged requests, and a consecutive-failure circuit breaker
+  (``serve.resilience``), tuned the way an operator would set a request
+  deadline from the SLO.
+
+Suites (each includes a gray/degradation component — the failure mode a
+health check misses: a silently slow machine is alive, routable, and
+quietly growing a backlog the nearest-replica policy never looks at):
+
+* ``preemption_wave`` — a replica host goes gray at 10x while a correlated
+  spot-market preemption takes out the Tokyo region and recovers;
+* ``partition_heal``  — the Tokyo region partitions off and heals under a
+  degraded Beijing<->London WAN link, then a host goes gray at 8x;
+* ``link_rot``        — creeping gray slowdowns on two hosts plus a long
+  link degradation (bandwidth cut + latency inflation); nothing crashes.
+
+Acceptance (asserted by ``check_result``): the resilient stack beats naive
+on BOTH p95 latency and goodput in at least 3 suites, and the chaos fuzzer
+(``sim.chaos``) reports zero invariant violations.
+
+``python -m benchmarks.chaos_bench --smoke`` runs a time-compressed
+version for CI, writing BENCH_chaos.smoke.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+
+def _sys_path():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_chaos.json")
+SMOKE_OUT = os.path.join(os.path.dirname(__file__), "BENCH_chaos.smoke.json")
+
+SLO_S = 10.0
+HORIZON_S = 240.0
+RATE_RPS = 4.0
+N_REPLICAS = 3
+FUZZ_SEEDS = 25
+
+# On the Fig. 1 fleet the first three eligible machines host the replicas:
+# 0 Beijing, 1 California, 2 Tokyo. The suites aim their gray failures at
+# the hosts — a gray replica still reports a short queue, so naive
+# load-aware routing keeps feeding it while its backlog silently grows.
+
+
+def _suites():
+    from repro.sim import faults as fm
+    return {
+        "preemption_wave": fm.FaultPlan((
+            fm.GrayFailure(at=0.10, machines=(0,), slowdown=10.0,
+                           duration=0.60),
+            fm.RegionPreemption(at=0.35, region="Tokyo", frac=1.0,
+                                recover_after=0.20),
+        )),
+        "partition_heal": fm.FaultPlan((
+            fm.LinkDegradation(at=0.05, duration=0.80,
+                               regions=("Beijing", "London"),
+                               bw_factor=0.3, lat_factor=3.0),
+            fm.RegionPartition(at=0.30, duration=0.25,
+                               regions=("Tokyo",)),
+            fm.GrayFailure(at=0.40, machines=(1,), slowdown=8.0,
+                           duration=0.40),
+        )),
+        "link_rot": fm.FaultPlan((
+            fm.GrayFailure(at=0.10, machines=(0,), slowdown=12.0,
+                           ramp=0.15, duration=0.60),
+            fm.GrayFailure(at=0.30, machines=(2,), slowdown=6.0,
+                           duration=0.45),
+            fm.LinkDegradation(at=0.20, duration=0.60,
+                               regions=("California", "Tokyo"),
+                               bw_factor=0.2, lat_factor=4.0),
+        )),
+    }
+
+
+def _resilience():
+    """Operator-tuned against healthy p95 (~1 s on this fleet): an attempt
+    that hasn't answered in 4 s is abandoned and retried elsewhere; a hedge
+    fires after ~2 healthy p95s; three consecutive failures eject a machine
+    for a probation window."""
+    from repro.serve.resilience import (BreakerPolicy, HedgePolicy,
+                                        ResilienceConfig, RetryPolicy)
+    return ResilienceConfig(
+        retry=RetryPolicy(timeout_s=4.0, max_retries=3,
+                          backoff_base_s=0.25, backoff_mult=2.0),
+        hedge=HedgePolicy(delay_s=2.0, max_hedges=1),
+        breaker=BreakerPolicy(failure_threshold=3, probation_s=20.0))
+
+
+def _run_arm(plan, resilience, trace, graph, model, seed: int) -> dict:
+    from repro.serve.evaluate import summarize
+    from repro.sim import ServeExecutor
+    raw = ServeExecutor(graph, model, list(trace), "nearest",
+                        n_replicas=N_REPLICAS, fault_plan=plan,
+                        resilience=resilience, seed=seed).run()
+    res = summarize(raw, SLO_S)
+    return res.as_dict()
+
+
+def suite_comparison(time_scale: float = 1.0, seed: int = 0) -> dict:
+    from repro.core import cost_model as cm
+    from repro.core.graph import paper_fig1_graph
+    from repro.serve.costs import serve_model_from_task
+    from repro.serve.traffic import ModelMix, TrafficConfig, generate
+
+    graph = paper_fig1_graph(seed)
+    model = serve_model_from_task(cm.ModelTask("Chat-34B", 34e9, 60, 7168),
+                                  name="chat-34b", decode_efficiency=0.01)
+    regions = tuple(sorted({m.region for m in graph.machines}))
+    trace = generate(TrafficConfig(
+        rate_rps=RATE_RPS, horizon_s=HORIZON_S * time_scale,
+        regions=regions,
+        mixes=(ModelMix("chat-34b", prompt_median=96.0, gen_median=32.0),)),
+        seed=seed)
+
+    out: dict = {}
+    for name, plan in _suites().items():
+        naive = _run_arm(plan, None, trace, graph, model, seed)
+        resil = _run_arm(plan, _resilience(), trace, graph, model, seed)
+        wins_p95 = resil["p95_s"] < naive["p95_s"] - 1e-9
+        wins_goodput = resil["goodput_rps"] > naive["goodput_rps"] + 1e-9
+        out[name] = {
+            "naive": naive, "resilient": resil,
+            "p95_improvement": _rel(naive["p95_s"], resil["p95_s"]),
+            "goodput_gain": _rel(resil["goodput_rps"],
+                                 naive["goodput_rps"], inverse=True),
+            "resilient_wins": bool(wins_p95 and wins_goodput),
+        }
+        print(f"  {name:<18} p95 {naive['p95_s']:7.1f} -> "
+              f"{resil['p95_s']:7.1f}s  goodput "
+              f"{naive['goodput_rps']:.3f} -> {resil['goodput_rps']:.3f} "
+              f"rps  {'WIN' if out[name]['resilient_wins'] else 'LOSS'}",
+              file=sys.stderr)
+    return out
+
+
+def _rel(base: float, new: float, inverse: bool = False) -> float:
+    if inverse:
+        new, base = base, new
+        if not math.isfinite(base) or base <= 0:
+            return math.nan
+        return (new - base) / base
+    if not math.isfinite(base) or base <= 0:
+        return math.nan
+    return (base - new) / base
+
+
+def run_chaos_bench(time_scale: float = 1.0, fuzz_seeds: int = FUZZ_SEEDS,
+                    out_path: str = OUT, seed: int = 0,
+                    check_planes: bool = True) -> dict:
+    from repro.sim import chaos
+
+    res = {
+        "artifact": "chaos_bench",
+        "config": {"time_scale": time_scale, "seed": seed,
+                   "slo_s": SLO_S, "rate_rps": RATE_RPS,
+                   "horizon_s": HORIZON_S * time_scale,
+                   "n_replicas": N_REPLICAS, "fuzz_seeds": fuzz_seeds,
+                   "suites": sorted(_suites())},
+    }
+    print("chaos suites:", file=sys.stderr)
+    res["suites"] = suite_comparison(time_scale, seed=seed)
+    print(f"fuzzing {fuzz_seeds} random fault plans...", file=sys.stderr)
+    fz = chaos.fuzz(fuzz_seeds, base_seed=seed, check_planes=check_planes,
+                    log=lambda s: None)
+    res["fuzz"] = {"n_seeds": fz["n_seeds"],
+                   "violations": fz["violations"],
+                   "injector_mix": sorted({i for c in fz["cases"]
+                                           for i in c["injectors"]})}
+    wins = sum(1 for s in res["suites"].values() if s["resilient_wins"])
+    res["derived"] = (f"resilient_wins={wins}/{len(res['suites'])} "
+                      f"fuzz={fz['n_seeds']}seeds/"
+                      f"{fz['violations']}violations")
+    from benchmarks._provenance import stamp
+    stamp(res, seed=seed, solver_mode="fast+reference" if check_planes
+          else "fast")
+    with open(out_path, "w") as f:
+        json.dump(res, f, indent=1, default=float)
+    return res
+
+
+def check_result(res: dict) -> None:
+    """Schema + acceptance assertions the CI smoke job relies on."""
+    assert res["artifact"] == "chaos_bench"
+    assert "provenance" in res and res["provenance"]["git_sha"]
+    suites = res["suites"]
+    assert len(suites) >= 3
+    for name, row in suites.items():
+        for arm in ("naive", "resilient"):
+            m = row[arm]
+            assert m["n_completed"] > 0, (name, arm)
+            assert (m["n_completed"] + m["n_dropped"]
+                    + m["n_incomplete"] == m["n_requests"]), (name, arm)
+            for field in ("p95_s", "goodput_rps"):
+                v = m[field]
+                assert isinstance(v, (int, float)) and not math.isnan(v), \
+                    (name, arm, field)
+    # acceptance: retry+hedge+breaker beats naive reroute on BOTH p95
+    # latency and goodput in >= 3 fault suites
+    wins = sum(1 for row in suites.values() if row["resilient_wins"])
+    assert wins >= 3, f"resilient wins only {wins}/{len(suites)} suites"
+    assert res["fuzz"]["violations"] == 0, res["fuzz"]
+
+
+def chaos_bench_artifact() -> dict:
+    """benchmarks/run.py entry: full scale, writes BENCH_chaos.json."""
+    res = run_chaos_bench()
+    check_result(res)
+    return res
+
+
+ALL = [chaos_bench_artifact]
+
+
+def main(argv=None) -> None:
+    _sys_path()
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="time-compressed suites + small fuzz, assert the "
+                         "emitted JSON round-trips (CI)")
+    ap.add_argument("--time-scale", type=float, default=None)
+    ap.add_argument("--fuzz-seeds", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        out = args.out or SMOKE_OUT
+        res = run_chaos_bench(time_scale=args.time_scale or 0.25,
+                              fuzz_seeds=args.fuzz_seeds or 5,
+                              out_path=out)
+        with open(out) as f:   # must round-trip as valid JSON
+            check_result(json.load(f))
+        print(f"chaos_bench --smoke PASS ({res['derived']}) wrote {out}")
+        return
+
+    res = run_chaos_bench(time_scale=args.time_scale or 1.0,
+                          fuzz_seeds=args.fuzz_seeds or FUZZ_SEEDS,
+                          out_path=args.out or OUT)
+    check_result(res)
+    print(json.dumps({k: v for k, v in res.items() if k != "suites"},
+                     indent=1, default=float))
+    print(f"wrote {args.out or OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -188,6 +188,28 @@ def _repair(graph, tasks, groups, deferred, remaining):
 # GNN assignment records exactly which tasks each machine serves, only the
 # affected groups are re-planned.
 # ---------------------------------------------------------------------------
+def replan_with_deferral(graph: ClusterGraph,
+                         tasks: Sequence[cm.ModelTask],
+                         params, cfg: gnn.GNNConfig) -> Assignment:
+    """Full re-plan that degrades instead of raising: when the fleet no
+    longer meets the aggregate requirement of every task, the largest tasks
+    move to ``deferred`` (waiting for capacity — ``on_join`` re-plans the
+    moment a machine returns) until the remainder fits. A failure landing
+    while the fleet is capacity-starved must shrink the plan, never crash
+    the control plane."""
+    keep = sorted(tasks, key=lambda t: -t.params)
+    dropped: list[str] = []
+    while keep and not check_capacity(graph, keep):
+        dropped.append(keep.pop(0).name)
+    if not keep:
+        return Assignment(groups={}, deferred=[t.name for t in tasks],
+                          stage_order={})
+    sub_tasks = [t for t in tasks if t.name not in dropped]
+    a = task_assignments(graph, sub_tasks, params, cfg)
+    return Assignment(groups=a.groups, deferred=a.deferred + dropped,
+                      stage_order=a.stage_order)
+
+
 def recover(graph: ClusterGraph, assignment: Assignment,
             failed: Sequence[int], tasks: Sequence[cm.ModelTask],
             params, cfg: gnn.GNNConfig) -> tuple[ClusterGraph, Assignment]:
@@ -215,9 +237,10 @@ def recover(graph: ClusterGraph, assignment: Assignment,
         pool = [i for i in range(survivors.n) if i not in used]
         sub = survivors.subgraph(pool) if pool else None
         if sub is None or not check_capacity(sub, redo_tasks):
-            # not enough spare capacity: re-plan everything on the survivors
-            new_assignment = task_assignments(survivors, tasks, params, cfg)
-            return survivors, new_assignment
+            # not enough spare capacity: re-plan everything on the
+            # survivors, deferring the largest tasks if even that is short
+            return survivors, replan_with_deferral(survivors, tasks,
+                                                   params, cfg)
         sub_assign = task_assignments(sub, redo_tasks, params, cfg)
         for name, ids in sub_assign.groups.items():
             ok[name] = sorted(pool[k] for k in ids)

@@ -39,6 +39,9 @@ _EXPORTS = {
     "Router": "router", "POLICIES": "router", "StaticPlacement": "router",
     "HulkPlacement": "router", "entry_node": "router",
     "Autoscaler": "autoscale", "AutoscaleConfig": "autoscale",
+    "RetryPolicy": "resilience", "HedgePolicy": "resilience",
+    "BreakerPolicy": "resilience", "ShedPolicy": "resilience",
+    "ResilienceConfig": "resilience", "CircuitBreaker": "resilience",
     "ServeResult": "evaluate", "run_serve": "evaluate",
     "summarize": "evaluate", "evaluate_serve_scenario": "evaluate",
     "evaluate_all_serve": "evaluate", "serve_comparison_table": "evaluate",

@@ -41,6 +41,11 @@ class ServeResult:
     scale_events: int
     final_replicas: list[int]
     replicas: list[dict]
+    # why requests were dropped: reason -> count (max_routes | unreachable |
+    # deadline | retry_budget)
+    drops_by_reason: dict = dataclasses.field(default_factory=dict)
+    retries: int = 0            # timeout-driven re-dispatches (resilient path)
+    hedges: int = 0             # speculative extra attempts launched
     metrics: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
@@ -62,6 +67,11 @@ def summarize(raw: dict, slo_s: float) -> ServeResult:
                      if r.latency_s is not None)
     pct = (lambda q: float(np.percentile(lats, q))) if n_completed \
         else (lambda q: math.inf)
+    drops_by_reason: dict = {}
+    for r in records:
+        if r.dropped:
+            reason = r.drop_reason or "unknown"
+            drops_by_reason[reason] = drops_by_reason.get(reason, 0) + 1
     return ServeResult(
         policy=raw["policy"],
         n_requests=len(records),
@@ -79,6 +89,9 @@ def summarize(raw: dict, slo_s: float) -> ServeResult:
         scale_events=len(raw["scale_log"]),
         final_replicas=raw["final_replicas"],
         replicas=raw["replicas"],
+        drops_by_reason=drops_by_reason,
+        retries=sum(r.retries for r in records),
+        hedges=sum(r.hedges for r in records),
         metrics=dict(raw.get("metrics", {})))
 
 
@@ -90,7 +103,7 @@ def serve_gnn(model, n_replicas: int, seed: int = 0):
 
 
 def run_serve(scenario: sc.ServeScenario, policy: str, seed: int = 0,
-              trace: Optional[list] = None,
+              trace: Optional[list] = None, data_plane: str = "fast",
               obs=None) -> tuple[ServeResult, dict]:
     graph = scenario.fleet(seed)
     if trace is None:
@@ -105,7 +118,10 @@ def run_serve(scenario: sc.ServeScenario, policy: str, seed: int = 0,
         prefill_chunk=scenario.prefill_chunk,
         autoscale=scenario.autoscale, spares=scenario.spares,
         fault_fracs=scenario.fault_fracs,
-        kills_per_fault=scenario.kills_per_fault, seed=seed, obs=obs).run()
+        kills_per_fault=scenario.kills_per_fault,
+        fault_plan=scenario.fault_plan, resilience=scenario.resilience,
+        max_routes=scenario.max_routes, data_plane=data_plane,
+        seed=seed, obs=obs).run()
     return summarize(raw, scenario.slo_s), raw
 
 

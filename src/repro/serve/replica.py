@@ -275,6 +275,29 @@ class Replica:
         else:
             self._idle_cb = cb
 
+    def abort(self, seq: Seq) -> bool:
+        """Cancel one sequence (attempt timed out / lost a hedge race).
+        Returns False if the sequence already completed or left this replica.
+        A running sequence frees its KV reservation immediately; the current
+        iteration still runs to completion (the abort takes effect at the
+        next batch boundary, like a real engine's cancellation)."""
+        if seq in self.queue:
+            self.queue.remove(seq)
+            self._pending_prefill -= seq.prefill_remaining
+            self._pending_decode -= seq.decode_remaining
+            if self._obs.enabled:
+                self._obs.metrics.inc("replica.seqs_aborted")
+            return True
+        if seq in self.running:
+            self.running.remove(seq)
+            self.kv_used -= seq.kv_tokens
+            self._pending_prefill -= seq.prefill_remaining
+            self._pending_decode -= seq.decode_remaining
+            if self._obs.enabled:
+                self._obs.metrics.inc("replica.seqs_aborted")
+            return True
+        return False
+
     def fail(self) -> list[Request]:
         """Machine died: every queued AND in-flight request is interrupted
         and handed back for re-routing (generation restarts from scratch —

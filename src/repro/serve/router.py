@@ -118,20 +118,36 @@ class Router:
             return lat_s + wait
         return (lat_s + wait) / (0.25 + prob)
 
-    def pick(self, req: Request,
-             replicas: Sequence[Replica]) -> Optional[Replica]:
+    def pick(self, req: Request, replicas: Sequence[Replica],
+             exclude: Sequence[int] = (), breaker=None,
+             now: float = 0.0) -> Optional[Replica]:
         """Best healthy, accepting, reachable replica that can ever hold the
-        request; None if no replica qualifies (request is dropped)."""
+        request; None if no replica qualifies (request is dropped).
+
+        ``exclude`` skips machines already attempted (hedging picks a
+        *different* replica); ``breaker`` is an optional
+        ``serve.resilience.CircuitBreaker`` consulted per machine at ``now``.
+        If the breaker banned every otherwise-viable candidate the router
+        fails open — ejecting the whole fleet must degrade to naive routing,
+        never to serving nothing."""
         src = self.entry(req.region)
         best, best_score = None, math.inf
+        banned = False
         for rep in replicas:
             if not (rep.alive and rep.accepting and rep.fits(req)):
                 continue
+            if rep.machine in exclude:
+                continue
             if not self.net.reachable(src, rep.machine):
+                continue
+            if breaker is not None and not breaker.allow(rep.machine, now):
+                banned = True
                 continue
             s = self._score(req, src, rep)
             if s < best_score:
                 best, best_score = rep, s
+        if best is None and banned:
+            return self.pick(req, replicas, exclude=exclude)
         return best
 
 
@@ -172,6 +188,11 @@ class StaticPlacement:
     def on_machine_failed(self, machine_id: int) -> None:
         if machine_id in self.active:
             self.active.remove(machine_id)
+
+    def on_machine_recovered(self, machine_id: int) -> None:
+        """A crashed host came back (fault-plan recovery): host on it again."""
+        if machine_id not in self.active:
+            self.active.append(machine_id)
 
     def on_machine_joined(self, machine: Machine, graph: ClusterGraph) -> int:
         """A provisioned machine joined the fleet (autoscale): host on it."""
@@ -272,6 +293,14 @@ class HulkPlacement:
                 # its old graph (and the mapping stays aligned with it);
                 # routing still skips the dead replica via ``alive``
                 pass
+
+    def on_machine_recovered(self, machine_id: int) -> None:
+        """A crashed host came back (fault-plan recovery): host on it again.
+        The runtime's view is NOT rewound — Algorithm 1 already re-planned
+        around the failure; the revived machine rejoins as serving capacity
+        only, exactly like a spare."""
+        if machine_id not in self.active:
+            self.active.append(machine_id)
 
     def on_machine_joined(self, machine: Machine, graph: ClusterGraph) -> int:
         """Autoscale provisioned a machine: run it through

@@ -18,11 +18,16 @@ from repro.sim.evaluate import (FleetSimulation, SimResult, comparison_table,
                                 evaluate_all, evaluate_scenario,
                                 observed_telemetry, observed_telemetry_live,
                                 simulate_single)
+from repro.sim.faults import (FaultPlan, GrayFailure, LinkDegradation,
+                              MachineCrash, MachineFlap, RegionPartition,
+                              RegionPreemption, compile_plan,
+                              plan_from_fracs)
 from repro.sim.network import NetworkModel
 from repro.sim.scenarios import (SCENARIOS, SERVE_SCENARIOS, Scenario,
                                  ServeScenario, get_scenario,
                                  get_serve_scenario, register,
-                                 register_serve)
+                                 register_serve, temporary_registration,
+                                 unregister, unregister_serve)
 from repro.sim.workload import ServeExecutor
 
 __all__ = [
@@ -30,6 +35,10 @@ __all__ = [
     "Scenario", "SCENARIOS", "register", "get_scenario",
     "ServeScenario", "SERVE_SCENARIOS", "register_serve",
     "get_serve_scenario", "ServeExecutor",
+    "unregister", "unregister_serve", "temporary_registration",
+    "FaultPlan", "MachineCrash", "RegionPreemption", "LinkDegradation",
+    "RegionPartition", "GrayFailure", "MachineFlap",
+    "compile_plan", "plan_from_fracs",
     "FleetSimulation", "SimResult", "simulate_single",
     "evaluate_scenario", "evaluate_all", "comparison_table",
     "observed_telemetry", "observed_telemetry_live",

@@ -1,0 +1,230 @@
+"""Chaos fuzzer: random fault plans vs the robustness invariants.
+
+``random_fault_plan`` draws a random ``sim.faults.FaultPlan`` (crashes with
+and without recovery, preemption waves, link degradations, partitions that
+always heal before the horizon, gray slowdowns, flapping machines) from a
+counter-based rng, and ``fuzz`` drives the serving executor under each plan
+checking the invariants the chaos layer promises (docs/ROBUSTNESS.md):
+
+1. **determinism** — same seed + plan => byte-identical canonical record
+   dump across two independent runs;
+2. **exactly-once resolution** — every offered request completes or drops
+   exactly once, drops carry a recorded reason, and the obs counters agree
+   with the records (``serve.completed``, ``serve.dropped``,
+   ``serve.dropped.<reason>``);
+3. **plane equivalence** — the fast data plane produces the same records
+   as the reference plane, faults and all;
+4. **liveness** — ``run()`` returns on every seed: no fault sequence may
+   deadlock the engine or strand a request unresolved forever (unresolved
+   at horizon is allowed only for requests still making progress, i.e.
+   attempts live at cutoff).
+
+Both the naive and the resilient (retry + hedge + breaker) serving paths
+are fuzzed. CLI (the CI ``chaos-smoke`` job):
+
+    python -m repro.sim.chaos --seeds 25
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional
+
+import numpy as np
+
+from repro.core.graph import paper_fig1_graph
+from repro.sim import faults as faults_mod
+from repro.sim.workload import ServeExecutor
+
+CHAOS_STREAM = 0xC4A0
+
+_HORIZON_S = 60.0
+_RATE_RPS = 3.0
+
+
+# ---------------------------------------------------------------------------
+# Random plan generation
+# ---------------------------------------------------------------------------
+def random_fault_plan(seed: int, graph, max_injectors: int = 4
+                      ) -> faults_mod.FaultPlan:
+    """A random plan against ``graph``: 1..max_injectors injectors, every
+    window healing before the horizon so the fleet always gets a chance to
+    recover (partitions that persist to the end are a scenario choice, not
+    fuzzer noise)."""
+    rng = np.random.default_rng((seed, CHAOS_STREAM))
+    regions = sorted({m.region for m in graph.machines})
+    injectors = []
+    for _ in range(int(rng.integers(1, max_injectors + 1))):
+        at = float(rng.uniform(0.1, 0.6))
+        dur = float(rng.uniform(0.05, min(0.3, 0.9 - at)))
+        kind = int(rng.integers(0, 6))
+        if kind == 0:
+            rec = dur if rng.random() < 0.5 else None
+            injectors.append(faults_mod.MachineCrash(
+                at=at, kills=int(rng.integers(1, 3)), recover_after=rec))
+        elif kind == 1:
+            region = regions[int(rng.integers(0, len(regions)))]
+            injectors.append(faults_mod.RegionPreemption(
+                at=at, region=region, frac=float(rng.uniform(0.5, 1.0)),
+                recover_after=dur))
+        elif kind == 2:
+            a, b = rng.choice(len(regions), size=2, replace=False)
+            injectors.append(faults_mod.LinkDegradation(
+                at=at, duration=dur, regions=(regions[a], regions[b]),
+                bw_factor=float(rng.uniform(0.1, 0.6)),
+                lat_factor=float(rng.uniform(1.5, 5.0))))
+        elif kind == 3:
+            region = regions[int(rng.integers(0, len(regions)))]
+            injectors.append(faults_mod.RegionPartition(
+                at=at, duration=dur, regions=(region,)))
+        elif kind == 4:
+            injectors.append(faults_mod.GrayFailure(
+                at=at, picks=int(rng.integers(1, 3)),
+                slowdown=float(rng.uniform(2.0, 6.0)),
+                ramp=float(rng.uniform(0.0, 0.1)), duration=dur))
+        else:
+            injectors.append(faults_mod.MachineFlap(
+                at=at, down=0.02, up=0.04, cycles=int(rng.integers(1, 3))))
+    return faults_mod.FaultPlan(tuple(injectors))
+
+
+# ---------------------------------------------------------------------------
+# One fuzz case
+# ---------------------------------------------------------------------------
+def _chaos_model():
+    from repro.core import cost_model as cm
+    from repro.serve.costs import serve_model_from_task
+    task = cm.ModelTask("Chat-34B", 34e9, 60, 7168)
+    return serve_model_from_task(task, name="chat-34b",
+                                 decode_efficiency=0.01)
+
+
+def _chaos_trace(graph, seed: int):
+    from repro.serve.traffic import ModelMix, TrafficConfig, generate
+    regions = tuple(sorted({m.region for m in graph.machines}))
+    cfg = TrafficConfig(
+        rate_rps=_RATE_RPS, horizon_s=_HORIZON_S, regions=regions,
+        mixes=(ModelMix("chat-34b", prompt_median=96.0, gen_median=32.0),))
+    return generate(cfg, seed=seed)
+
+
+def run_case(seed: int, plan: faults_mod.FaultPlan,
+             data_plane: str = "fast", resilient: bool = False,
+             obs=None) -> dict:
+    """One executor run under ``plan``; returns the raw run dict."""
+    from repro.serve.resilience import ResilienceConfig
+    graph = paper_fig1_graph(seed)
+    trace = _chaos_trace(graph, seed)
+    res = ResilienceConfig.default() if resilient else None
+    return ServeExecutor(graph, _chaos_model(), trace, "least_loaded",
+                         n_replicas=3, fault_plan=plan, resilience=res,
+                         data_plane=data_plane, seed=seed, obs=obs).run()
+
+
+def canonical_records(raw: dict) -> str:
+    """The byte-comparable projection of a run: every per-request outcome
+    the chaos layer is accountable for, in rid order."""
+    rows = []
+    for rid in sorted(raw["records"]):
+        r = raw["records"][rid]
+        rows.append({
+            "rid": rid, "t_arrival": r.req.t_arrival,
+            "t_complete": r.t_complete, "latency_s": r.latency_s,
+            "dropped": r.dropped, "drop_reason": r.drop_reason,
+            "n_routes": r.n_routes, "machines": list(r.machines),
+            "retries": r.retries, "hedges": r.hedges,
+        })
+    return json.dumps(rows, sort_keys=True)
+
+
+def check_invariants(raw: dict, rec=None) -> dict:
+    """Exactly-once resolution + counter consistency for one run. Returns
+    summary counts; raises AssertionError on any violation."""
+    completed = dropped = unresolved = 0
+    reasons: dict[str, int] = {}
+    for rid, r in raw["records"].items():
+        is_done = r.t_complete is not None
+        assert not (is_done and r.dropped), \
+            f"rid {rid} both completed and dropped"
+        if is_done:
+            completed += 1
+            assert r.latency_s is not None and r.latency_s >= 0.0, rid
+            assert r.drop_reason is None, rid
+        elif r.dropped:
+            dropped += 1
+            assert r.drop_reason, f"rid {rid} dropped without a reason"
+            reasons[r.drop_reason] = reasons.get(r.drop_reason, 0) + 1
+        else:
+            unresolved += 1
+    assert completed + dropped + unresolved == len(raw["records"])
+    if rec is not None and rec.enabled:
+        c = rec.metrics.snapshot()["counters"]
+        assert c.get("serve.requests", 0) == len(raw["records"])
+        assert c.get("serve.completed", 0) == completed
+        assert c.get("serve.dropped", 0) == dropped
+        for reason, n in reasons.items():
+            assert c.get(f"serve.dropped.{reason}", 0) == n, reason
+    return {"offered": len(raw["records"]), "completed": completed,
+            "dropped": dropped, "unresolved": unresolved,
+            "reasons": reasons}
+
+
+def fuzz_one(seed: int, check_planes: bool = True) -> dict:
+    """All invariants for one seed, over both serving paths."""
+    from repro import obs as obs_mod
+    graph = paper_fig1_graph(seed)
+    plan = random_fault_plan(seed, graph)
+    out: dict = {"seed": seed,
+                 "injectors": [type(i).__name__ for i in plan.injectors]}
+    for resilient in (False, True):
+        tag = "resilient" if resilient else "naive"
+        rec = obs_mod.Recorder()
+        raw = run_case(seed, plan, "fast", resilient, obs=rec)
+        dump = canonical_records(raw)
+        out[tag] = check_invariants(raw, rec)
+        # determinism: an independent second run must replay byte-identically
+        again = canonical_records(run_case(seed, plan, "fast", resilient))
+        assert dump == again, f"seed {seed} {tag}: non-deterministic replay"
+        if check_planes:
+            ref = canonical_records(run_case(seed, plan, "reference",
+                                             resilient))
+            assert dump == ref, f"seed {seed} {tag}: fast != reference"
+    return out
+
+
+def fuzz(n_seeds: int = 25, base_seed: int = 0,
+         check_planes: bool = True, log=print) -> dict:
+    results = []
+    for k in range(n_seeds):
+        r = fuzz_one(base_seed + k, check_planes=check_planes)
+        log(f"seed {r['seed']:3d}: {'+'.join(r['injectors']):<60} "
+            f"naive {r['naive']['completed']}/{r['naive']['offered']} "
+            f"resilient {r['resilient']['completed']}"
+            f"/{r['resilient']['offered']} OK")
+        results.append(r)
+    return {"n_seeds": n_seeds, "base_seed": base_seed,
+            "violations": 0, "cases": results}
+
+
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--seeds", type=int, default=25,
+                    help="number of random fault plans to fuzz")
+    ap.add_argument("--base-seed", type=int, default=0)
+    ap.add_argument("--skip-planes", action="store_true",
+                    help="skip the fast-vs-reference plane equivalence runs")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON summary here")
+    args = ap.parse_args(argv)
+    summary = fuzz(args.seeds, base_seed=args.base_seed,
+                   check_planes=not args.skip_planes,
+                   log=lambda s: print(s, file=sys.stderr))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=1, default=float)
+    print(f"chaos fuzz PASS: {args.seeds} seeds, 0 invariant violations")
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,9 @@ class ComputeModel:
             self.slow_factor[slow] = self.jitter.straggler_slowdown
         self.busy_s = np.zeros(graph.n)  # accounting: total busy time/machine
         self.alive = np.ones(graph.n, bool)   # False = deprovisioned
+        # gray-failure multiplier (sim.faults): silent slowdown on top of the
+        # persistent straggler factor; 1.0 everywhere = no fault, bit-identical
+        self.gray = np.ones(graph.n)
 
     def stragglers(self) -> list[int]:
         return [int(i) for i in np.nonzero(self.slow_factor > 1.0)[0]]
@@ -58,7 +61,7 @@ class ComputeModel:
         shares under this model."""
         sigma = np.full(len(self.slow_factor), float(self.jitter.sigma),
                         np.float32)
-        return self.slow_factor.astype(np.float32).copy(), sigma
+        return (self.slow_factor * self.gray).astype(np.float32), sigma
 
     def add_machine(self, machine) -> int:
         """The fleet grew (autoscale provisioning): track the new machine.
@@ -68,6 +71,7 @@ class ComputeModel:
         self.slow_factor = np.append(self.slow_factor, 1.0)
         self.busy_s = np.append(self.busy_s, 0.0)
         self.alive = np.append(self.alive, True)
+        self.gray = np.append(self.gray, 1.0)
         return len(self.tflops) - 1
 
     def remove_machine(self, machine: int) -> None:
@@ -79,12 +83,20 @@ class ComputeModel:
         """Re-provision a previously deprovisioned machine."""
         self.alive[machine] = True
 
+    def set_gray(self, machine: int, factor: float) -> None:
+        """Install (or clear, with ``factor=1.0``) a gray-failure slowdown:
+        the machine stays alive and schedulable, every compute op just takes
+        ``factor`` x longer. Visible to ``telemetry()`` but NOT to
+        ``stragglers()`` — gray failures are the degradations the static
+        straggler census doesn't know about."""
+        self.gray[machine] = float(factor)
+
     def duration(self, machine: int, work_flops: float, step: int = 0,
                  microbatch: int = 0, tag: int = 0) -> float:
         if not self.alive[machine]:
             raise ValueError(f"machine {machine} is deprovisioned")
         base = work_flops / (float(self.tflops[machine]) * 1e12)
-        f = float(self.slow_factor[machine])
+        f = float(self.slow_factor[machine]) * float(self.gray[machine])
         if self.jitter.sigma > 0:
             rng = np.random.default_rng(
                 (self.seed, machine, step, microbatch, tag))

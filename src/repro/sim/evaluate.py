@@ -42,6 +42,7 @@ from repro.core import placement as placement_mod
 from repro.core import train as gnn_train
 from repro.core.graph import ClusterGraph, NodeTelemetry
 from repro.runtime import ElasticRuntime, FailureEvent
+from repro.sim import faults as faults_mod
 from repro.sim import scenarios as sc
 from repro.sim.compute import ComputeModel, JitterConfig
 from repro.sim.engine import Simulator
@@ -98,6 +99,12 @@ class FullFleetPlacer:
 
     def on_failure(self, failed_ids: Sequence[int], at_step: int):
         self.graph = self.graph.remove_machines(list(failed_ids))
+        return self.graph, self._placements()
+
+    def on_join(self, machine):
+        """A crashed machine recovered (fault-plan rejoin): the full-fleet
+        strategies simply absorb it into every group."""
+        self.graph = self.graph.add_machine(machine)
         return self.graph, self._placements()
 
 
@@ -214,6 +221,16 @@ class HulkPlacer:
         return self.rt.graph, self._placements(self.rt.graph,
                                                self.rt.assignment)
 
+    def on_join(self, machine):
+        """A crashed machine recovered (fault-plan rejoin): run it through
+        ``ElasticRuntime.on_join`` — the same deferred-task / >10%-win
+        re-assignment path autoscale joins use — then sim-refine if
+        enabled."""
+        self.rt.on_join(machine)
+        self._commit_refined()
+        return self.rt.graph, self._placements(self.rt.graph,
+                                               self.rt.assignment)
+
 
 # ---------------------------------------------------------------------------
 # The fleet simulation
@@ -253,7 +270,7 @@ class FleetSimulation:
                  jitter: Optional[JitterConfig] = None,
                  traffic: Optional[sc.TrafficBuilder] = None,
                  fault_fracs: Sequence[float] = (),
-                 kills_per_fault: int = 1,
+                 kills_per_fault: int = 1, fault_plan=None,
                  steps: int = 3, seed: int = 0, concurrent: bool = True,
                  net_solver: str = "fast", obs=None):
         self.graph = graph
@@ -265,6 +282,11 @@ class FleetSimulation:
         self.traffic = traffic
         self.fault_fracs = tuple(fault_fracs)
         self.kills_per_fault = kills_per_fault
+        # legacy fields are a thin shim over the plan (same schedule + rng)
+        if fault_plan is None and self.fault_fracs:
+            fault_plan = faults_mod.plan_from_fracs(self.fault_fracs,
+                                                    kills_per_fault)
+        self.fault_plan = fault_plan if fault_plan else None
         self.steps = steps
         self.seed = seed
         self.concurrent = concurrent
@@ -277,6 +299,16 @@ class FleetSimulation:
         self._queue: list[str] = []       # sequential mode
         self._bytes_retired = 0.0
         self._stragglers: list[int] = []
+        # fault-plan payloads carry *original* (t=0 graph) machine ids;
+        # _orig2cur translates them to post-compaction ids (-1 = gone)
+        self._orig2cur: list[int] = list(range(graph.n))
+        # environmental fault state, keyed on original ids so it can be
+        # re-applied to the freshly built models after every re-plan
+        self._active_link_faults: dict[int, dict] = {}
+        self._gray_state: dict[int, float] = {}
+        # plans with partitions park unreachable transfers until the heal
+        # instead of erroring — a severed pipeline stalls, it doesn't crash
+        self._stall_net = faults_mod.has_link_faults(self.fault_plan)
 
     # -- model (re)construction --------------------------------------------
     def _estimate_horizon(self) -> float:
@@ -302,6 +334,47 @@ class FleetSimulation:
         self.compute = ComputeModel(self.graph, self.jitter, seed=self.seed)
         self._comm = cm.make_comm(self.graph, self.comm_model)
         self._stragglers = self.compute.stragglers()
+        self.net.stall_unreachable = self._stall_net
+        self._reapply_faults()
+
+    # -- fault-plan id translation + environmental state --------------------
+    def _cur_pairs(self, pairs) -> list[tuple[int, int]]:
+        out = []
+        for a, b in pairs:
+            ca = self._orig2cur[a] if a < len(self._orig2cur) else -1
+            cb = self._orig2cur[b] if b < len(self._orig2cur) else -1
+            if ca >= 0 and cb >= 0:
+                out.append((ca, cb))
+        return out
+
+    def _reapply_faults(self) -> None:
+        """Fresh models know nothing: re-install every still-active link
+        overlay and gray slowdown (translated to current ids) after a
+        re-plan rebuilt them."""
+        for fid, p in self._active_link_faults.items():
+            pairs = self._cur_pairs(p["pairs"])
+            if pairs:
+                self.net.apply_link_fault(fid, pairs,
+                                          bw_factor=p["bw_factor"],
+                                          lat_factor=p["lat_factor"],
+                                          cut=p["cut"])
+        for orig, factor in self._gray_state.items():
+            cur = self._orig2cur[orig] if orig < len(self._orig2cur) else -1
+            if cur >= 0:
+                self.compute.set_gray(cur, factor)
+
+    def _remap_after_failure(self, victims: Sequence[int]) -> None:
+        """Victims (current ids) left and the graph compacted: ids above
+        each victim shift down by one."""
+        vs = sorted(victims)
+        remapped = []
+        for cur in self._orig2cur:
+            if cur < 0 or cur in vs:
+                remapped.append(-1)
+            else:
+                shift = sum(1 for v in vs if v < cur)
+                remapped.append(cur - shift)
+        self._orig2cur = remapped
 
     # -- task stepping ------------------------------------------------------
     def _feasible(self, run: _TaskRun, pl: Placement) -> bool:
@@ -349,27 +422,87 @@ class FleetSimulation:
             self._start_step(self._queue.pop(0))
 
     # -- faults -------------------------------------------------------------
-    def _fire_fault(self, k: int) -> None:
+    def _apply_fault(self, act) -> None:
+        """Dispatch one compiled ``sim.faults.FaultAction``."""
+        if self.obs.enabled:
+            self.obs.metrics.inc("faults.injected")
+            self.obs.metrics.inc(f"faults.{act.kind}")
+            self.obs.trace.instant(
+                "faults", act.kind, cat="fault",
+                args={"injector": act.injector,
+                      **{k: v for k, v in act.payload.items()
+                         if isinstance(v, (int, float, str, bool))
+                         and v is not None}})
+        if act.kind == "crash":
+            self._apply_crash(act.payload, act.injector)
+        elif act.kind == "link":
+            self._active_link_faults[act.injector] = dict(act.payload)
+            pairs = self._cur_pairs(act.payload["pairs"])
+            if pairs:
+                self.net.apply_link_fault(act.injector, pairs,
+                                          bw_factor=act.payload["bw_factor"],
+                                          lat_factor=act.payload["lat_factor"],
+                                          cut=act.payload["cut"],
+                                          sim=self.sim)
+        elif act.kind == "link_clear":
+            self._active_link_faults.pop(act.payload["fault_id"], None)
+            self.net.clear_link_fault(act.payload["fault_id"], sim=self.sim)
+        elif act.kind == "gray":
+            m = act.payload["machine"]
+            self._gray_state[m] = act.payload["factor"]
+            cur = self._orig2cur[m] if m < len(self._orig2cur) else -1
+            if cur >= 0:
+                self.compute.set_gray(cur, act.payload["factor"])
+        elif act.kind == "gray_clear":
+            m = act.payload["machine"]
+            self._gray_state.pop(m, None)
+            cur = self._orig2cur[m] if m < len(self._orig2cur) else -1
+            if cur >= 0:
+                self.compute.set_gray(cur, 1.0)
+        else:
+            raise ValueError(f"unknown fault action {act.kind!r}")
+
+    def _apply_crash(self, payload: dict, k: int) -> None:
         alive = [r for r in self.runs.values()
                  if r.finish_time is None and not r.failed]
         if not alive:
             return  # nothing left to disrupt (run over or capacity exhausted)
-        # Preemptions strike the fleet uniformly — idle spares included, not
-        # just assigned machines (Systems A/B/C occupy the whole fleet, so
-        # their draws are unchanged). A kill that lands on a spare still
-        # aborts the in-flight steps (the epoch bump and model rebuild are
-        # fleet-wide), but it preserves the placement: recover() re-plans no
-        # group, no pipeline loses capacity, and the restarted steps run at
-        # full speed — so a disaster-recovery spare pool (the paper idles
-        # 7/46 nodes for exactly this) softens faults instead of being
-        # invisible to them.
-        pool = list(range(self.graph.n))
-        if len(pool) <= 1:
+        explicit = payload.get("machines", ())
+        if explicit:
+            victims = sorted({self._orig2cur[v] for v in explicit
+                              if v < len(self._orig2cur)
+                              and self._orig2cur[v] >= 0})
+            # a crash can never take the whole fleet: the last survivor stays
+            victims = victims[:max(0, self.graph.n - 1)]
+        else:
+            # Preemptions strike the fleet uniformly — idle spares included,
+            # not just assigned machines (Systems A/B/C occupy the whole
+            # fleet, so their draws are unchanged). A kill that lands on a
+            # spare still aborts the in-flight steps (the epoch bump and
+            # model rebuild are fleet-wide), but it preserves the placement:
+            # recover() re-plans no group, no pipeline loses capacity, and
+            # the restarted steps run at full speed — so a disaster-recovery
+            # spare pool (the paper idles 7/46 nodes for exactly this)
+            # softens faults instead of being invisible to them.
+            pool = list(range(self.graph.n))
+            if len(pool) <= 1:
+                return
+            rng = np.random.default_rng(
+                (self.seed, faults_mod.CRASH_STREAM, k))
+            kills = min(int(payload["kills"]), len(pool) - 1)
+            victims = sorted(int(i) for i in
+                             rng.choice(pool, size=kills, replace=False))
+        if not victims:
             return
-        rng = np.random.default_rng((self.seed, 0xFA17, k))
-        kills = min(self.kills_per_fault, len(pool) - 1)
-        victims = sorted(int(i) for i in
-                         rng.choice(pool, size=kills, replace=False))
+        # capture the Machine objects BEFORE the graph compacts (the rejoin
+        # needs them), keyed by original id so the map survives further
+        # failures between crash and recovery
+        rec_after = payload.get("recover_after_s")
+        rejoin: list[tuple[int, object]] = []
+        if rec_after is not None and hasattr(self.placer, "on_join"):
+            cur2orig = {c: o for o, c in enumerate(self._orig2cur) if c >= 0}
+            rejoin = [(cur2orig.get(v, -1), self.graph.machines[v])
+                      for v in victims]
         self.sim.bump_epoch()
         self.net.reset()
         try:
@@ -383,10 +516,46 @@ class FleetSimulation:
                     run.failed = True
             self._queue.clear()
             return
+        self._remap_after_failure(victims)
         self.replans.append({"at_s": self.sim.now, "killed": victims,
                              "fault_index": k})
         self._bytes_retired += self.net.bytes_moved  # old net is replaced next
         self._build_models(self._estimate_horizon())
+        self._restart_unfinished()
+        if rejoin:
+            self.sim.schedule(rec_after, self._apply_rejoin, tuple(rejoin),
+                              pin_epoch=False)
+
+    def _apply_rejoin(self, rejoin) -> None:
+        """Crashed machines recover: each rejoins through the placer's
+        ``on_join`` (full-fleet absorption or ``ElasticRuntime.on_join``),
+        the models rebuild around the grown graph, and interrupted steps
+        restart — the checkpoint-restore convention faults already use."""
+        alive = [r for r in self.runs.values()
+                 if r.finish_time is None and not r.failed]
+        if not alive:
+            return
+        self.sim.bump_epoch()
+        self.net.reset()
+        joined = []
+        for orig, machine in rejoin:
+            try:
+                self.graph, self.placements = self.placer.on_join(machine)
+            except assign_mod.PlacementError:
+                continue  # the re-plan rejected the rejoin; stay as-is
+            if orig >= 0:
+                self._orig2cur[orig] = self.graph.n - 1
+            joined.append(orig)
+        self.replans.append({"at_s": self.sim.now, "rejoined": joined})
+        if self.obs.enabled:
+            self.obs.metrics.inc("faults.recoveries", len(joined))
+            self.obs.trace.instant("faults", "rejoin", cat="fault",
+                                   args={"n": len(joined)})
+        self._bytes_retired += self.net.bytes_moved
+        self._build_models(self._estimate_horizon())
+        self._restart_unfinished()
+
+    def _restart_unfinished(self) -> None:
         # interrupted steps restart on the new placement (progress since the
         # last completed step is lost — checkpoint-restore semantics)
         if self.concurrent:
@@ -412,9 +581,11 @@ class FleetSimulation:
         else:
             self._queue = names[1:]
             self._start_step(names[0])
-        for k, frac in enumerate(self.fault_fracs):
-            if math.isfinite(horizon) and horizon > 0:
-                self.sim.schedule(frac * horizon, self._fire_fault, k,
+        if self.fault_plan is not None and math.isfinite(horizon) \
+                and horizon > 0:
+            for act in faults_mod.compile_plan(self.fault_plan, self.graph,
+                                               horizon, self.seed):
+                self.sim.schedule(act.t, self._apply_fault, act,
                                   pin_epoch=False)
         self.sim.run()
 
@@ -601,6 +772,7 @@ def evaluate_scenario(scenario: sc.Scenario, seed: int = 0,
                 jitter=scenario.jitter, traffic=scenario.traffic,
                 fault_fracs=scenario.fault_fracs,
                 kills_per_fault=scenario.kills_per_fault,
+                fault_plan=scenario.fault_plan,
                 steps=scenario.steps, seed=seed,
                 concurrent=concurrent).run()
             rows[name] = {

@@ -173,6 +173,12 @@ class NetworkModel:
         self.capacity_scale = capacity_scale
         self.solver = solver
         self.tombstoned: set[int] = set()
+        # named link-fault overlays (sim.faults): fault_id -> degradation
+        self._link_faults: dict = {}
+        # fault-plan runs park unreachable transfers for re-dispatch at heal
+        # instead of raising; default (False) keeps the hard-error contract
+        self.stall_unreachable = False
+        self._stalled: list[tuple] = []
         self._route_cache: dict[tuple[int, int], tuple] = {}
         self._rebuild_topology(graph)
         self._active: dict[int, _Flow] = {}      # fid -> flow, insertion order
@@ -249,6 +255,13 @@ class NetworkModel:
             return
         route = self._route(i, j)
         if route is None:
+            if self.stall_unreachable:
+                # partitioned: park the transfer; a topology change (heal,
+                # revive) re-dispatches it via _refault/_retry_stalled
+                self._stalled.append((i, j, float(nbytes), done_cb))
+                if self._obs.enabled:
+                    self._obs.metrics.inc("net.transfers_stalled")
+                return
             raise UnreachableError(f"no route between machines {i} and {j}")
         if self._obs.enabled:
             done_cb = self._traced_done(sim, i, j, nbytes, done_cb)
@@ -549,13 +562,27 @@ class NetworkModel:
 
     # -- topology ------------------------------------------------------------
     def _masked_latency(self) -> np.ndarray:
-        """Graph latency with tombstoned (deprovisioned) nodes cut out."""
+        """Graph latency with tombstoned (deprovisioned) nodes cut out and
+        active link-fault overlays applied (cuts sever pairs via the
+        0-sentinel; latency inflation multiplies, composing across
+        overlapping faults)."""
         lat = self.graph.latency
-        if self.tombstoned:
+        if self.tombstoned or self._link_faults:
             lat = lat.copy()
-            dead = sorted(self.tombstoned)
-            lat[dead, :] = 0.0
-            lat[:, dead] = 0.0
+            if self.tombstoned:
+                dead = sorted(self.tombstoned)
+                lat[dead, :] = 0.0
+                lat[:, dead] = 0.0
+            n = lat.shape[0]
+            for f in self._link_faults.values():
+                for a, b in f["pairs"]:
+                    if a >= n or b >= n:
+                        continue
+                    if f["cut"]:
+                        lat[a, b] = lat[b, a] = 0.0
+                    elif f["lat_factor"] != 1.0:
+                        lat[a, b] *= f["lat_factor"]
+                        lat[b, a] *= f["lat_factor"]
         return lat
 
     def _rebuild_topology(self, graph: ClusterGraph) -> None:
@@ -571,6 +598,16 @@ class NetworkModel:
 
     def _refresh_bandwidth(self, lat: np.ndarray) -> None:
         self.link_bw = cm.link_bandwidth_array(lat, self.comm_model)
+        if self._link_faults:
+            for f in self._link_faults.values():
+                if f["cut"] or f["bw_factor"] == 1.0:
+                    continue  # cuts already zeroed the latency mask
+                n = self.link_bw.shape[0]
+                for a, b in f["pairs"]:
+                    if a >= n or b >= n:
+                        continue
+                    self.link_bw[a, b] *= f["bw_factor"]
+                    self.link_bw[b, a] *= f["bw_factor"]
         self.e2e_bw = cm.link_bandwidth_array(self.routed_ms, self.comm_model)
 
     # -- elasticity ----------------------------------------------------------
@@ -647,6 +684,55 @@ class NetworkModel:
         self.tombstoned.discard(mid)
         self._rebuild_topology(self.graph)
 
+    # -- link faults (sim.faults) --------------------------------------------
+    def apply_link_fault(self, fault_id, pairs, *, bw_factor: float = 1.0,
+                         lat_factor: float = 1.0, cut: bool = False,
+                         sim: Optional[Simulator] = None) -> None:
+        """Install a named degradation overlay on ``pairs`` (machine-id
+        tuples): ``cut=True`` severs them; otherwise bandwidth multiplies by
+        ``bw_factor`` and latency by ``lat_factor``. Overlays persist across
+        ``reset()`` (they are environmental, not flow state) until
+        ``clear_link_fault``. With ``sim`` given, in-flight flows are
+        re-capped and rebalanced in place and stalled transfers re-dispatch."""
+        self._link_faults[fault_id] = {
+            "pairs": tuple((int(a), int(b)) for a, b in pairs),
+            "bw_factor": float(bw_factor), "lat_factor": float(lat_factor),
+            "cut": bool(cut)}
+        self._refault(sim)
+
+    def clear_link_fault(self, fault_id,
+                         sim: Optional[Simulator] = None) -> None:
+        if self._link_faults.pop(fault_id, None) is None:
+            return
+        self._refault(sim)
+
+    def _refault(self, sim: Optional[Simulator]) -> None:
+        """Recompute topology after an overlay change and propagate to live
+        flows: each flow keeps its route but re-reads per-link capacity
+        (keeping the old value where the new table reads 0 — the same
+        keep-capacity semantics tombstoning uses), then the fleet
+        rebalances. Transfers parked by ``stall_unreachable`` get one
+        re-dispatch attempt — a heal makes them progress again."""
+        self._rebuild_topology(self.graph)
+        for f in self._active.values():
+            new_bw = tuple(
+                float(self.link_bw[a, b]) if self.link_bw[a, b] > 0 else old
+                for (a, b), old in zip(f.links, f.link_bw))
+            f.link_bw = new_bw
+            f.link_bw_arr = np.asarray(new_bw, np.float64)
+        if sim is None:
+            return
+        if self._active:
+            if self.solver == "fast":
+                self._dirty_all = True
+                self._request_solve(sim)
+            else:
+                self._rebalance_reference(sim)
+        if self._stalled:
+            stalled, self._stalled = self._stalled, []
+            for (i, j, nbytes, cb) in stalled:
+                self.transfer(sim, i, j, nbytes, cb)
+
     def _rebuild_link_counts(self) -> None:
         """Re-derive the flat per-link flow-count table after n (and with it
         the linearized link index a*n+b) changed."""
@@ -665,6 +751,7 @@ class NetworkModel:
             if f.finish_ev is not None:
                 f.finish_ev.cancel()
         self._active.clear()
+        self._stalled.clear()
         self._flows_on_link.clear()
         self._link_nflows[:] = 0
         self._dirty.clear()

@@ -14,6 +14,7 @@ bit-identically.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable, Optional
 
@@ -49,6 +50,9 @@ class Scenario:
     jitter: JitterConfig = JitterConfig()
     fault_fracs: tuple[float, ...] = ()   # fault times / estimated run length
     kills_per_fault: int = 1
+    # declarative fault injection (sim.faults.FaultPlan); supersedes the
+    # fault_fracs shim above when set
+    fault_plan: Optional[object] = None
     traffic: Optional[TrafficBuilder] = None
     steps: int = 3
 
@@ -63,12 +67,42 @@ def register(scenario: Scenario) -> Scenario:
     return scenario
 
 
+def unregister(name: str) -> None:
+    """Remove a training scenario (test isolation; unknown names are a
+    no-op so teardown never fails)."""
+    SCENARIOS.pop(name, None)
+
+
 def get_scenario(name: str) -> Scenario:
     try:
         return SCENARIOS[name]
     except KeyError:
         raise KeyError(f"unknown scenario {name!r}; "
                        f"known: {sorted(SCENARIOS)}") from None
+
+
+@contextlib.contextmanager
+def temporary_registration(*scenarios):
+    """Register throwaway scenarios for the duration of a ``with`` block —
+    accepts any mix of ``Scenario`` and ``ServeScenario`` and always removes
+    them on exit, so a failing test can't poison the registries for the rest
+    of the session."""
+    registered: list[tuple[dict, str]] = []
+    try:
+        for scn in scenarios:
+            if isinstance(scn, ServeScenario):
+                register_serve(scn)
+                registered.append((SERVE_SCENARIOS, scn.name))
+            elif isinstance(scn, Scenario):
+                register(scn)
+                registered.append((SCENARIOS, scn.name))
+            else:
+                raise TypeError(
+                    f"not a scenario: {type(scn).__name__}")
+        yield scenarios[0] if len(scenarios) == 1 else scenarios
+    finally:
+        for registry, name in registered:
+            registry.pop(name, None)
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +237,13 @@ class ServeScenario:
     spares: tuple = ()                              # Machines to provision
     fault_fracs: tuple[float, ...] = ()
     kills_per_fault: int = 1
+    # declarative fault injection (sim.faults.FaultPlan); supersedes the
+    # fault_fracs shim above when set
+    fault_plan: Optional[object] = None
+    # serving resilience (serve.resilience.ResilienceConfig); None = the
+    # legacy blind-reroute path
+    resilience: Optional[object] = None
+    max_routes: Optional[int] = None                # None = executor default
 
 
 SERVE_SCENARIOS: dict[str, ServeScenario] = {}
@@ -214,6 +255,12 @@ def register_serve(scenario: ServeScenario) -> ServeScenario:
                          "registered")
     SERVE_SCENARIOS[scenario.name] = scenario
     return scenario
+
+
+def unregister_serve(name: str) -> None:
+    """Remove a serve scenario (test isolation; unknown names are a no-op
+    so teardown never fails)."""
+    SERVE_SCENARIOS.pop(name, None)
 
 
 def get_serve_scenario(name: str) -> ServeScenario:

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -57,6 +58,7 @@ import numpy as np
 from repro import obs as obs_mod
 from repro.core import cost_model as cm
 from repro.core.graph import ClusterGraph, Machine
+from repro.sim import faults as faults_mod
 from repro.sim.compute import ComputeModel, JitterConfig
 from repro.sim.engine import Barrier, Simulator
 from repro.sim.network import NetworkModel
@@ -236,7 +238,25 @@ class RequestRecord:
     t_first_token: Optional[float] = None
     n_routes: int = 0
     dropped: bool = False
+    drop_reason: Optional[str] = None   # max_routes|unreachable|deadline|retry_budget
+    retries: int = 0                    # timeout-driven re-dispatches
+    hedges: int = 0                     # speculative extra attempts launched
     machines: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Attempt:
+    """One dispatch of a request onto a replica (resilient path): the unit
+    the retry timeout, the hedging race and the breaker account in. ``done``
+    attempts are inert — every callback that might fire late (timeout,
+    prompt delivery, replica completion) checks it first, which is what
+    makes 'completes or drops exactly once' a local invariant."""
+    rep: object                         # serve.replica.Replica
+    t_start: float
+    hedged: bool = False
+    seq: object = None                  # set once admitted at the replica
+    done: bool = False
+    timeout_ev: object = None
 
 
 class ServeExecutor:
@@ -259,10 +279,13 @@ class ServeExecutor:
                  prefill_chunk: int = 256,
                  autoscale=None, spares: Sequence[Machine] = (),
                  fault_fracs: Sequence[float] = (), kills_per_fault: int = 1,
+                 fault_plan=None, resilience=None,
+                 max_routes: Optional[int] = None,
                  seed: int = 0, run_until_s: Optional[float] = None,
                  data_plane: str = "fast", obs=None):
         from repro.serve.autoscale import Autoscaler
         from repro.serve.replica import Replica
+        from repro.serve.resilience import CircuitBreaker
         from repro.serve.router import HulkPlacement, Router, StaticPlacement
 
         self.obs = obs if obs is not None else obs_mod.NULL
@@ -274,6 +297,8 @@ class ServeExecutor:
         self.max_batch = max_batch
         self.prefill_chunk = prefill_chunk
         self.kills_per_fault = kills_per_fault
+        self.max_routes = (int(max_routes) if max_routes is not None
+                           else int(self.MAX_ROUTES))
         self._Replica = Replica
 
         if data_plane not in ("fast", "reference"):
@@ -305,6 +330,23 @@ class ServeExecutor:
         self.run_until = (run_until_s if run_until_s is not None
                           else 8.0 * max(self.horizon, 1.0) + 600.0)
         self.fault_fracs = tuple(fault_fracs)
+        # the legacy fields are a thin shim over the fault plan: each
+        # fraction becomes one drawn-victim MachineCrash, compiled to the
+        # exact event schedule (and rng keys) the old loop produced
+        if fault_plan is None and self.fault_fracs:
+            fault_plan = faults_mod.plan_from_fracs(self.fault_fracs,
+                                                    kills_per_fault)
+        self.fault_plan = fault_plan if fault_plan else None
+
+        # resilience policies (serve.resilience.ResilienceConfig); None = the
+        # legacy blind-reroute path, bit-identical to pre-chaos behavior
+        self.resilience = resilience
+        self._breaker = (CircuitBreaker(resilience.breaker)
+                         if resilience is not None
+                         and resilience.breaker is not None else None)
+        self._attempts: dict[int, list[_Attempt]] = {}
+        self._pending_retry: dict[int, int] = {}
+
         self.scale_log: list[dict] = []
         self._spares = collections.deque(spares)
 
@@ -441,8 +483,20 @@ class ServeExecutor:
         self._routing_changed()
         self.scale_log.append({"t": self.sim.now, "event": "replica_down",
                                "machine": mid})
-        for req in rep.drain():
-            self._route(req)
+        drained = rep.drain()
+        if self.resilience is not None:
+            # only the drained (queued) attempts detach — in-flight sequences
+            # finish on the draining replica and resolve normally
+            for req in drained:
+                for a in self._attempts.get(req.rid, []):
+                    if a.done or a.rep is not rep or a.seq is None:
+                        continue
+                    a.done = True
+                    if a.timeout_ev is not None:
+                        a.timeout_ev.cancel()
+                        a.timeout_ev = None
+        for req in drained:
+            self._dispatch(req)
         # release the machine once its in-flight sequences finish and their
         # responses have left: deprovisioned nodes stop relaying traffic
         rep.when_idle(lambda: self._deprovision(mid))
@@ -460,50 +514,187 @@ class ServeExecutor:
                                "machine": mid})
 
     # -- faults --------------------------------------------------------------
-    def _fire_fault(self, k: int) -> None:
-        alive = sorted(m for m, r in self.replicas.items() if r.alive)
-        if len(alive) <= 1:
+    def _apply_fault(self, act) -> None:
+        """Dispatch one compiled ``sim.faults.FaultAction``."""
+        if self.obs.enabled:
+            self.obs.metrics.inc("faults.injected")
+            self.obs.metrics.inc(f"faults.{act.kind}")
+            self.obs.trace.instant(
+                "faults", act.kind, cat="fault",
+                args={"injector": act.injector,
+                      **{k: v for k, v in act.payload.items()
+                         if isinstance(v, (int, float, str, bool))
+                         and v is not None}})
+        if act.kind == "crash":
+            self._apply_crash(act.payload, act.injector)
+        elif act.kind == "link":
+            self.net.apply_link_fault(act.injector, act.payload["pairs"],
+                                      bw_factor=act.payload["bw_factor"],
+                                      lat_factor=act.payload["lat_factor"],
+                                      cut=act.payload["cut"], sim=self.sim)
+            self._routing_changed()
+        elif act.kind == "link_clear":
+            self.net.clear_link_fault(act.payload["fault_id"], sim=self.sim)
+            self._routing_changed()
+        elif act.kind == "gray":
+            self.compute.set_gray(act.payload["machine"],
+                                  act.payload["factor"])
+        elif act.kind == "gray_clear":
+            self.compute.set_gray(act.payload["machine"], 1.0)
+        else:
+            raise ValueError(f"unknown fault action {act.kind!r}")
+
+    def _apply_crash(self, payload: dict, k: int) -> None:
+        """Machines (or the replica processes on drawn victims) die.
+
+        Explicit victims are *machine-level*: the node tombstones out of the
+        network/compute models and stops relaying traffic. Drawn victims
+        (``machines=()``) keep the legacy ``fault_fracs`` semantics — the
+        replica process dies, the machine keeps routing — including the
+        legacy rng key, which is what makes the shim bit-identical."""
+        explicit = payload.get("machines", ())
+        if explicit:
+            victims = [int(v) for v in dict.fromkeys(explicit)
+                       if int(v) < self.graph.n
+                       and int(v) not in self.net.tombstoned]
+            machine_level = True
+        else:
+            alive = sorted(m for m, r in self.replicas.items() if r.alive)
+            if len(alive) <= 1:
+                return
+            rng = np.random.default_rng(
+                (self.seed, faults_mod.CRASH_STREAM, k))
+            kills = min(int(payload["kills"]), len(alive) - 1)
+            victims = sorted(int(v) for v in
+                             rng.choice(alive, size=kills, replace=False))
+            machine_level = False
+        if not victims:
             return
-        rng = np.random.default_rng((self.seed, 0xFA17, k))
-        kills = min(self.kills_per_fault, len(alive) - 1)
-        victims = sorted(int(v) for v in
-                         rng.choice(alive, size=kills, replace=False))
         interrupted = []
+        hosted = set()
         for v in victims:
-            rep = self.replicas.pop(v)
-            interrupted.extend(rep.fail())
-            self.retired.append(rep)
-            self.placement.on_machine_failed(v)
-            self.scale_log.append({"t": self.sim.now,
-                                   "event": "replica_failed", "machine": v})
+            rep = self.replicas.pop(v, None)
+            if rep is not None:
+                hosted.add(v)
+                if self.resilience is not None:
+                    self._detach_attempts(rep, record_failure=True)
+                interrupted.extend(rep.fail())
+                self.retired.append(rep)
+                self.placement.on_machine_failed(v)
+                self.scale_log.append({"t": self.sim.now,
+                                       "event": "replica_failed",
+                                       "machine": v})
+            if machine_level:
+                if v in self._provisioning:
+                    # crash hit a cold start mid-stream: abort it
+                    self._cancelled_starts.add(v)
+                if v not in self.net.tombstoned:
+                    self.net.remove_machine(v)
+                    self.compute.remove_machine(v)
+                self.scale_log.append({"t": self.sim.now,
+                                       "event": "machine_crashed",
+                                       "machine": v})
         self._routing_changed()
         for req in interrupted:
-            self._route(req)
+            self._dispatch(req)
+        rec_after = payload.get("recover_after_s")
+        if rec_after is not None and victims:
+            self.sim.schedule(rec_after, self._apply_recover, tuple(victims),
+                              machine_level, frozenset(hosted),
+                              pin_epoch=False)
+
+    def _apply_recover(self, victims, machine_level: bool, hosted) -> None:
+        """Crashed machines come back: revive the tombstones, clear breaker
+        history, and re-host a replica (nearest-peer cold start) on every
+        machine that was hosting one when it died — unless the autoscaler
+        already re-used the slot."""
+        for v in victims:
+            if v in self._provisioning or \
+                    (v in self.replicas and self.replicas[v].alive):
+                continue  # already re-provisioned through autoscaling
+            if machine_level and v in self.net.tombstoned:
+                self.net.revive_machine(v)
+                self.compute.revive_machine(v)
+            if self._breaker is not None:
+                self._breaker.reset(v)
+            self.scale_log.append({"t": self.sim.now,
+                                   "event": "machine_recovered",
+                                   "machine": v})
+            if self.obs.enabled:
+                self.obs.metrics.inc("faults.recoveries")
+                self.obs.trace.instant("faults", "recover", cat="fault",
+                                       args={"machine": int(v)})
+            if v in hosted:
+                self.placement.on_machine_recovered(v)
+                self._cold_start(v)
+        self._routing_changed()
+
+    def _detach_attempts(self, rep, record_failure: bool = False) -> None:
+        """Mark every live attempt admitted at ``rep`` done (its requests are
+        about to be handed back via ``drain``/``fail`` and re-dispatched —
+        without this they would resolve twice). Attempts whose prompt is
+        still in flight stay live: ``_r_deliver`` re-dispatches those."""
+        for atts in self._attempts.values():
+            for a in atts:
+                if a.done or a.rep is not rep or a.seq is None:
+                    continue
+                a.done = True
+                if a.timeout_ev is not None:
+                    a.timeout_ev.cancel()
+                    a.timeout_ev = None
+                if record_failure:
+                    self._r_record_failure(rep.machine)
 
     # -- request flow --------------------------------------------------------
     def _on_arrival(self, req) -> None:
         if self.obs.enabled:
             self.obs.metrics.inc("serve.requests")
-        self._route(req)
+        if self.resilience is not None:
+            self._r_arrival(req)
+        else:
+            self._route(req)
 
-    def _drop(self, rec) -> None:
+    def _dispatch(self, req) -> None:
+        """Route (or re-route) through whichever request path is active."""
+        if self.resilience is not None:
+            self._r_dispatch(req)
+        else:
+            self._route(req)
+
+    def _drop(self, rec, reason: str) -> None:
+        if rec.dropped or rec.t_complete is not None:
+            return
         rec.dropped = True
+        rec.drop_reason = reason
+        if self.resilience is not None:
+            # no zombie work: outstanding attempts are cancelled with the drop
+            for att in self._attempts.pop(rec.req.rid, []):
+                if att.done:
+                    continue
+                att.done = True
+                if att.timeout_ev is not None:
+                    att.timeout_ev.cancel()
+                    att.timeout_ev = None
+                if att.seq is not None and att.rep.alive:
+                    att.rep.abort(att.seq)
+            self._pending_retry.pop(rec.req.rid, None)
         if self.obs.enabled:
             self.obs.metrics.inc("serve.dropped")
+            self.obs.metrics.inc(f"serve.dropped.{reason}")
             self.obs.trace.instant("requests", "dropped", cat="request",
-                                   args={"rid": rec.req.rid,
+                                   args={"rid": rec.req.rid, "reason": reason,
                                          "n_routes": rec.n_routes})
 
     def _route(self, req) -> None:
         rec = self.records[req.rid]
         if rec.dropped or rec.t_complete is not None:
             return
-        if rec.n_routes >= self.MAX_ROUTES:
-            self._drop(rec)
+        if rec.n_routes >= self.max_routes:
+            self._drop(rec, "max_routes")
             return
         rep = self.router.pick(req, self._replica_list())
         if rep is None:
-            self._drop(rec)
+            self._drop(rec, "unreachable")
             return
         if rec.n_routes > 0 and self.obs.enabled:
             # failover edge: this request already ran (or queued) elsewhere
@@ -532,7 +723,7 @@ class ServeExecutor:
             # the response's only relay was deprovisioned mid-generation:
             # the reply is lost (the request path is guarded at pick time,
             # but a sequence admitted before the tombstone can finish after)
-            self._drop(self.records[req.rid])
+            self._drop(self.records[req.rid], "unreachable")
             return
         nbytes = req.gen_tokens * self.model.response_bytes_per_token
         self.net.transfer(self.sim, machine, dst,
@@ -561,14 +752,235 @@ class ServeExecutor:
         if self.autoscaler is not None and rec.latency_s is not None:
             self.autoscaler.observe_completion(rec.latency_s)
 
+    # -- resilient request path (serve.resilience) ---------------------------
+    # One request fans out into _Attempts. Liveness: every attempt either
+    # completes, times out (retry policy), or dies with its replica (crash
+    # handler / _r_deliver); retries are budget-bounded and every dispatch
+    # consumes n_routes, so a request always terminates in _complete or in
+    # _drop with a recorded reason — the invariant the chaos fuzzer checks.
+    def _live_attempts(self, rid: int) -> list:
+        return [a for a in self._attempts.get(rid, []) if not a.done]
+
+    def _r_arrival(self, req) -> None:
+        shed = self.resilience.shed
+        if shed is not None and self._r_should_shed(req):
+            if self.obs.enabled:
+                self.obs.metrics.inc("serve.shed")
+            self._drop(self.records[req.rid], "deadline")
+            return
+        self._r_dispatch(req)
+        hp = self.resilience.hedge
+        if hp is not None:
+            self.sim.schedule(hp.delay_s, self._r_hedge, req,
+                              pin_epoch=False)
+
+    def _r_should_shed(self, req) -> bool:
+        """Deadline-aware load shedding: drop on arrival if even the BEST
+        replica's completion estimate (round-trip latency + backlog drain +
+        zero-contention service time) blows the deadline. Estimates only —
+        gray slowdowns and contention are invisible here, like real
+        admission control working from advertised capacity."""
+        pol = self.resilience.shed
+        src = self.router.entry(req.region)
+        best = math.inf
+        for rep in self._replica_list():
+            if not (rep.alive and rep.accepting and rep.fits(req)):
+                continue
+            if not self.net.reachable(src, rep.machine):
+                continue
+            lat = float(self.net.routed_ms[src, rep.machine]) * 1e-3
+            est = 2.0 * lat + rep.est_wait_s() + self.model.service_s(
+                req.prompt_tokens, req.gen_tokens,
+                float(self.compute.tflops[rep.machine]))
+            best = min(best, est)
+        if not math.isfinite(best):
+            return False    # nothing viable: let dispatch record unreachable
+        return best > pol.deadline_s * pol.slack
+
+    def _r_dispatch(self, req, hedge: bool = False) -> None:
+        rec = self.records[req.rid]
+        if rec.dropped or rec.t_complete is not None:
+            return
+        if rec.n_routes >= self.max_routes:
+            if not hedge and not self._live_attempts(req.rid) \
+                    and self._pending_retry.get(req.rid, 0) == 0:
+                self._drop(rec, "max_routes")
+            return
+        exclude = tuple(a.rep.machine for a in self._live_attempts(req.rid)) \
+            if hedge else ()
+        rep = self.router.pick(req, self._replica_list(), exclude=exclude,
+                               breaker=self._breaker, now=self.sim.now)
+        if rep is None:
+            if not hedge and not self._live_attempts(req.rid) \
+                    and self._pending_retry.get(req.rid, 0) == 0:
+                self._drop(rec, "unreachable")
+            return
+        if rec.n_routes > 0 and self.obs.enabled:
+            self.obs.metrics.inc("serve.failovers")
+            self.obs.trace.instant("requests", "failover", cat="request",
+                                   args={"rid": req.rid,
+                                         "to_machine": rep.machine,
+                                         "attempt": rec.n_routes + 1})
+        rec.n_routes += 1
+        rec.machines.append(rep.machine)
+        att = _Attempt(rep=rep, t_start=self.sim.now, hedged=hedge)
+        self._attempts.setdefault(req.rid, []).append(att)
+        if hedge:
+            rec.hedges += 1
+            if self.obs.enabled:
+                self.obs.metrics.inc("serve.hedges")
+                self.obs.trace.instant("requests", "hedge", cat="request",
+                                       args={"rid": req.rid,
+                                             "to_machine": rep.machine})
+        pol = self.resilience.retry
+        if pol is not None:
+            att.timeout_ev = self.sim.schedule(pol.timeout_s,
+                                               self._r_timeout, req, att,
+                                               pin_epoch=False)
+        src = self.router.entry(req.region)
+        nbytes = req.prompt_tokens * self.model.request_bytes_per_token
+        self.net.transfer(self.sim, src, rep.machine, nbytes,
+                          lambda: self._r_deliver(req, att))
+
+    def _r_deliver(self, req, att) -> None:
+        if att.done:
+            return
+        rec = self.records[req.rid]
+        if rec.dropped or rec.t_complete is not None:
+            att.done = True
+            return
+        rep = att.rep
+        if not (rep.alive and rep.accepting):
+            # replica died/drained while the prompt was in flight
+            att.done = True
+            if att.timeout_ev is not None:
+                att.timeout_ev.cancel()
+                att.timeout_ev = None
+            self._r_record_failure(rep.machine)
+            self._r_dispatch(req)
+            return
+        att.seq = rep.submit(req, lambda seq, a=att: self._r_served(req, a))
+
+    def _r_timeout(self, req, att) -> None:
+        att.timeout_ev = None
+        if att.done:
+            return
+        rec = self.records[req.rid]
+        if rec.dropped or rec.t_complete is not None:
+            return
+        att.done = True
+        if att.seq is not None and att.rep.alive:
+            att.rep.abort(att.seq)
+        self._r_record_failure(att.rep.machine)
+        if self.obs.enabled:
+            self.obs.metrics.inc("serve.attempt_timeouts")
+        pol = self.resilience.retry
+        if rec.retries >= pol.max_retries:
+            if not self._live_attempts(req.rid) \
+                    and self._pending_retry.get(req.rid, 0) == 0:
+                self._drop(rec, "retry_budget")
+            return
+        rec.retries += 1
+        if self.obs.enabled:
+            self.obs.metrics.inc("serve.retries")
+        backoff = pol.backoff_base_s * pol.backoff_mult ** (rec.retries - 1)
+        self._pending_retry[req.rid] = \
+            self._pending_retry.get(req.rid, 0) + 1
+        self.sim.schedule(backoff, self._r_retry_fire, req, pin_epoch=False)
+
+    def _r_retry_fire(self, req) -> None:
+        left = self._pending_retry.get(req.rid, 0) - 1
+        if left > 0:
+            self._pending_retry[req.rid] = left
+        else:
+            self._pending_retry.pop(req.rid, None)
+        rec = self.records[req.rid]
+        if rec.dropped or rec.t_complete is not None:
+            return
+        self._r_dispatch(req)
+
+    def _r_served(self, req, att) -> None:
+        if att.done:
+            return
+        att.done = True
+        if att.timeout_ev is not None:
+            att.timeout_ev.cancel()
+            att.timeout_ev = None
+        rec = self.records[req.rid]
+        if rec.dropped or rec.t_complete is not None:
+            return
+        dst = self.router.entry(req.region)
+        if not self.net.reachable(att.rep.machine, dst):
+            # response lost (see _on_served); resilient mode re-dispatches
+            # instead of dropping — the work is gone, the request is not
+            self._r_record_failure(att.rep.machine)
+            self._r_dispatch(req)
+            return
+        self._r_record_success(att.rep.machine)
+        nbytes = req.gen_tokens * self.model.response_bytes_per_token
+        self.net.transfer(self.sim, att.rep.machine, dst, nbytes,
+                          lambda: self._r_complete(req, att))
+
+    def _r_complete(self, req, att) -> None:
+        rec = self.records[req.rid]
+        if rec.dropped or rec.t_complete is not None:
+            return      # a faster attempt already resolved this request
+        if att.hedged and self.obs.enabled:
+            self.obs.metrics.inc("serve.hedge_wins")
+        # first completion wins: cancel the losers at their replicas
+        for other in self._attempts.pop(req.rid, []):
+            if other is att or other.done:
+                continue
+            other.done = True
+            if other.timeout_ev is not None:
+                other.timeout_ev.cancel()
+                other.timeout_ev = None
+            if other.seq is not None and other.rep.alive:
+                other.rep.abort(other.seq)
+        self._pending_retry.pop(req.rid, None)
+        self._complete(req, att.seq)
+
+    def _r_hedge(self, req) -> None:
+        rec = self.records[req.rid]
+        if rec.dropped or rec.t_complete is not None:
+            return
+        hp = self.resilience.hedge
+        if rec.hedges >= hp.max_hedges:
+            return
+        if self._live_attempts(req.rid):
+            self._r_dispatch(req, hedge=True)
+        if rec.hedges < hp.max_hedges and not rec.dropped \
+                and rec.t_complete is None:
+            self.sim.schedule(hp.delay_s, self._r_hedge, req,
+                              pin_epoch=False)
+
+    def _r_record_failure(self, machine: int) -> None:
+        if self._breaker is None:
+            return
+        if self.obs.enabled:
+            self.obs.metrics.inc("serve.breaker_failures")
+        if self._breaker.record_failure(machine, self.sim.now):
+            if self.obs.enabled:
+                self.obs.metrics.inc("serve.breaker_ejections")
+                self.obs.trace.instant("requests", "breaker_open",
+                                       cat="serve",
+                                       args={"machine": int(machine)})
+
+    def _r_record_success(self, machine: int) -> None:
+        if self._breaker is not None:
+            self._breaker.record_success(machine)
+
     # -- entry point ---------------------------------------------------------
     def run(self) -> dict:
         for req in self.trace:
             self.sim.schedule(req.t_arrival, self._on_arrival, req,
                               pin_epoch=False)
-        for k, frac in enumerate(self.fault_fracs):
-            self.sim.schedule(frac * max(self.horizon, 1.0),
-                              self._fire_fault, k, pin_epoch=False)
+        if self.fault_plan is not None:
+            for act in faults_mod.compile_plan(self.fault_plan, self.graph,
+                                               max(self.horizon, 1.0),
+                                               self.seed):
+                self.sim.schedule(act.t, self._apply_fault, act,
+                                  pin_epoch=False)
         if self.autoscaler is not None:
             self.autoscaler.start()
         self.sim.run(until=self.run_until)

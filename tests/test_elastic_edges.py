@@ -1,0 +1,126 @@
+"""runtime.elastic failure edges: simultaneous multi-machine failures that
+span task groups, losing a whole task's group at once, and failures landing
+while a deferred task is still waiting for capacity."""
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import train as gnn_train
+from repro.core.graph import ClusterGraph, Machine, _latency_matrix
+from repro.runtime import ElasticRuntime, FailureEvent
+
+
+def _gnn(tasks, seed=7, steps=60):
+    cfg = gnn_train.gnn_config_for(tasks)
+    ds = gnn_train.make_dataset(2, tasks, n_nodes=12, seed=seed,
+                                label_frac=0.8)
+    params, _ = gnn_train.train_gnn(cfg, ds, steps=steps, lr=0.01)
+    return params, cfg
+
+
+def _lan_fleet_of(machines, seed=0):
+    rng = np.random.default_rng(seed)
+    return ClusterGraph(machines, _latency_matrix(machines, rng))
+
+
+def _check_consistent(rt):
+    """Post-recovery structural invariants: groups disjoint, ids in range,
+    every placed group memory-feasible."""
+    all_ids = [i for ids in rt.assignment.groups.values() for i in ids]
+    assert len(all_ids) == len(set(all_ids))
+    assert all(0 <= i < rt.graph.n for i in all_ids)
+    by_name = {t.name: t for t in rt.tasks}
+    mem = rt.graph.memory_gb()
+    for name, ids in rt.assignment.groups.items():
+        assert sum(mem[i] for i in ids) >= by_name[name].min_memory_gb
+
+
+@pytest.fixture(scope="module")
+def two_task_runtime_factory():
+    """One GNN training run shared by every test that needs a fresh
+    two-task runtime (the runtime itself is cheap; the GNN is not)."""
+    tasks = [cm.GPT2_1_5B, cm.BERT_LARGE]
+    params, cfg = _gnn(tasks)
+
+    def make(n_machines=8):
+        fleet = _lan_fleet_of([Machine("California", "A100", 8)
+                               for _ in range(n_machines)])
+        return ElasticRuntime(fleet, tasks, params, cfg)
+    return make
+
+
+def test_simultaneous_failure_across_groups(two_task_runtime_factory):
+    """One FailureEvent kills machines from BOTH task groups: a single
+    re-plan (one epoch bump) must recover both."""
+    rt = two_task_runtime_factory()
+    groups0 = {k: list(v) for k, v in rt.assignment.groups.items()}
+    assert len(groups0) == 2
+    victims = [ids[0] for ids in groups0.values()]   # one from each group
+    epoch0 = rt.state.epoch
+    report = rt.on_failure(FailureEvent(failed_ids=victims, at_step=50))
+    assert set(report["affected_tasks"]) == set(groups0)
+    assert set(report["restore_from_checkpoint"]) == set(groups0)
+    assert rt.state.epoch == epoch0 + 1              # exactly one re-plan
+    assert rt.graph.n == 6
+    assert report["deferred"] == []
+    _check_consistent(rt)
+
+
+def test_whole_group_loss_replaces_from_survivors(two_task_runtime_factory):
+    """Every machine of one task's group dies at once; with spare capacity
+    on the survivors the task must be re-placed, not silently dropped."""
+    rt = two_task_runtime_factory()
+    groups0 = {k: list(v) for k, v in rt.assignment.groups.items()}
+    victim_task = min(groups0, key=lambda k: len(groups0[k]))
+    report = rt.on_failure(FailureEvent(failed_ids=groups0[victim_task],
+                                        at_step=10))
+    assert victim_task in report["affected_tasks"]
+    assert victim_task not in report["deferred"]
+    assert rt.group_of(victim_task)                  # really re-placed
+    assert set(rt.assignment.groups) == set(groups0)
+    _check_consistent(rt)
+
+
+def test_cascading_failures_to_capacity_floor(two_task_runtime_factory):
+    """Repeated failure events shrink the fleet toward the floor; every
+    intermediate state stays consistent and the makespan stays finite
+    while both tasks remain placed."""
+    rt = two_task_runtime_factory()
+    for step in range(3):                            # 8 -> 5 machines
+        rt.on_failure(FailureEvent(failed_ids=[0], at_step=step))
+        _check_consistent(rt)
+    assert rt.graph.n == 5
+    if not rt.assignment.deferred:
+        assert np.isfinite(rt.makespan())
+    assert rt.state.epoch == 3
+
+
+def test_failure_while_task_deferred_keeps_it_deferred():
+    """OPT-175B defers on a five-machine fleet (needs every 640 GB node);
+    losing a machine while it waits must not un-defer it or corrupt the
+    placed task."""
+    tasks = [cm.OPT_175B, cm.BERT_LARGE]
+    params, cfg = _gnn(tasks)
+    fleet = _lan_fleet_of([Machine("California", "A100", 8)
+                           for _ in range(5)])
+    rt = ElasticRuntime(fleet, tasks, params, cfg)
+    assert rt.assignment.deferred, "construction should leave a task waiting"
+
+    # losing a machine while starved must degrade (defer), never raise -
+    # with four 640 GB survivors only one of the two tasks can hold
+    report = rt.on_failure(FailureEvent(failed_ids=[0], at_step=5))
+    assert len(report["deferred"]) == 1
+    assert len(rt.assignment.groups) == 1
+    _check_consistent(rt)
+
+    # joins while still capacity-starved always re-run assignment ...
+    r1 = rt.on_join(Machine("California", "A100", 8))
+    assert r1["rebalanced"] is True
+    assert len(rt.assignment.deferred) == 1          # 5 machines: still short
+
+    # ... and the join that restores the sixth machine places everything
+    r2 = rt.on_join(Machine("California", "A100", 8))
+    assert r2["rebalanced"] is True
+    assert rt.assignment.deferred == []
+    assert set(rt.assignment.groups) == {t.name for t in tasks}
+    _check_consistent(rt)

@@ -1,0 +1,310 @@
+"""sim.faults: plan compilation semantics, the fault_fracs shim's
+bit-identity, fault application through ServeExecutor / FleetSimulation,
+the scenario-registry isolation helpers, and a chaos-fuzzer smoke run."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import obs as obs_mod
+from repro.core import cost_model as cm
+from repro.core.graph import (ClusterGraph, Machine, _latency_matrix,
+                              paper_fig1_graph, random_fleet)
+from repro.serve.costs import serve_model_from_task
+from repro.serve.traffic import ModelMix, TrafficConfig, generate
+from repro.sim import faults as fm
+from repro.sim import scenarios as sc
+from repro.sim.chaos import canonical_records, check_invariants, fuzz_one
+from repro.sim.evaluate import FleetSimulation, FullFleetPlacer
+from repro.sim.workload import ServeExecutor
+
+H = 100.0   # compile-test horizon: fractions map to readable seconds
+
+
+def _two_region_graph(seed=0):
+    """4 machines in California, 2 in Berlin - for frac/region compilation."""
+    machines = [Machine("California", "A100", 8) for _ in range(4)] \
+        + [Machine("Berlin", "V100", 8) for _ in range(2)]
+    rng = np.random.default_rng(seed)
+    return ClusterGraph(machines, _latency_matrix(machines, rng))
+
+
+# ---------------------------------------------------------------------------
+# compile_plan semantics
+# ---------------------------------------------------------------------------
+def test_compile_explicit_crash_with_recovery():
+    plan = fm.FaultPlan((fm.MachineCrash(at=0.5, machines=(2,),
+                                         recover_after=0.25),))
+    acts = fm.compile_plan(plan, paper_fig1_graph(), H, seed=0)
+    assert len(acts) == 1
+    a = acts[0]
+    assert (a.t, a.kind, a.injector) == (50.0, "crash", 0)
+    assert a.payload["machines"] == (2,)
+    assert a.payload["recover_after_s"] == 25.0
+
+
+def test_compile_drawn_crash_defers_victims_to_fire_time():
+    acts = fm.compile_plan(fm.plan_from_fracs((0.3, 0.6), kills_per_fault=2),
+                           paper_fig1_graph(), H, seed=0)
+    assert [a.t for a in acts] == [30.0, 60.0]
+    for a in acts:
+        assert a.kind == "crash"
+        assert a.payload["machines"] == ()     # host draws at fire time
+        assert a.payload["kills"] == 2
+        assert a.payload["recover_after_s"] is None
+
+
+def test_compile_region_preemption_full_and_fractional():
+    g = _two_region_graph()
+    full = fm.compile_plan(fm.FaultPlan((fm.RegionPreemption(
+        at=0.2, region="California", frac=1.0),)), g, H, seed=0)
+    assert full[0].payload["machines"] == (0, 1, 2, 3)
+    part = fm.FaultPlan((fm.RegionPreemption(at=0.2, region="California", frac=0.5),))
+    a1 = fm.compile_plan(part, g, H, seed=0)
+    a2 = fm.compile_plan(part, g, H, seed=0)
+    assert a1[0].payload["machines"] == a2[0].payload["machines"]  # seeded
+    assert len(a1[0].payload["machines"]) == 2
+    assert set(a1[0].payload["machines"]) <= {0, 1, 2, 3}
+    # a region the graph doesn't have compiles to nothing
+    assert fm.compile_plan(fm.FaultPlan((fm.RegionPreemption(
+        at=0.2, region="Nowhere"),)), g, H) == []
+
+
+def test_compile_link_degradation_pairs_and_clear():
+    g = paper_fig1_graph()   # one machine per region: Beijing=0, London=3
+    plan = fm.FaultPlan((fm.LinkDegradation(
+        at=0.1, duration=0.4, regions=("Beijing", "London"),
+        bw_factor=0.25, lat_factor=3.0),))
+    acts = fm.compile_plan(plan, g, H)
+    assert [(a.t, a.kind) for a in acts] == [(10.0, "link"),
+                                             (50.0, "link_clear")]
+    assert acts[0].payload["pairs"] == ((0, 3),)
+    assert acts[0].payload["bw_factor"] == 0.25
+    assert acts[0].payload["cut"] is False
+    assert acts[1].payload["fault_id"] == 0
+
+
+def test_compile_partition_severs_region_from_rest():
+    g = paper_fig1_graph()   # Tokyo = machine 2 of 8
+    acts = fm.compile_plan(fm.FaultPlan((fm.RegionPartition(
+        at=0.3, duration=0.2, regions=("Tokyo",)),)), g, H)
+    assert acts[0].kind == "link" and acts[0].payload["cut"] is True
+    assert set(acts[0].payload["pairs"]) \
+        == {(2, j) for j in range(8) if j != 2}
+    assert acts[1] == fm.FaultAction(50.0, "link_clear", {"fault_id": 0}, 0)
+
+
+def test_compile_gray_ramp_staircase_and_clear():
+    plan = fm.FaultPlan((fm.GrayFailure(
+        at=0.2, machines=(1,), slowdown=5.0, ramp=0.2, ramp_steps=4,
+        duration=0.5),))
+    acts = fm.compile_plan(plan, paper_fig1_graph(), H)
+    grays = [a for a in acts if a.kind == "gray"]
+    assert [(a.t, a.payload["factor"]) for a in grays] \
+        == [(25.0, 2.0), (30.0, 3.0), (35.0, 4.0), (40.0, 5.0)]
+    clears = [a for a in acts if a.kind == "gray_clear"]
+    assert [(a.t, a.payload["machine"]) for a in clears] == [(70.0, 1)]
+
+
+def test_compile_gray_picks_are_seed_deterministic():
+    g = paper_fig1_graph()
+    plan = fm.FaultPlan((fm.GrayFailure(at=0.1, picks=2, slowdown=3.0),))
+    m1 = {a.payload["machine"] for a in fm.compile_plan(plan, g, H, seed=4)}
+    m2 = {a.payload["machine"] for a in fm.compile_plan(plan, g, H, seed=4)}
+    assert m1 == m2 and len(m1) == 2
+
+
+def test_compile_flap_is_crash_recover_cycles():
+    plan = fm.FaultPlan((fm.MachineFlap(at=0.1, machine=3, down=0.02,
+                                        up=0.05, cycles=3),))
+    acts = fm.compile_plan(plan, paper_fig1_graph(), H)
+    assert [a.t for a in acts] == [10.0, 17.0, 24.0]
+    for a in acts:
+        assert a.payload["machines"] == (3,)
+        assert a.payload["recover_after_s"] == 2.0
+
+
+def test_plan_helpers():
+    assert not fm.FaultPlan()
+    assert fm.FaultPlan((fm.MachineCrash(at=0.5),))
+    assert not fm.has_link_faults(None)
+    assert not fm.has_link_faults(fm.plan_from_fracs((0.5,)))
+    assert fm.has_link_faults(fm.FaultPlan((fm.RegionPartition(
+        at=0.1, duration=0.1, regions=("Tokyo",)),)))
+
+
+# ---------------------------------------------------------------------------
+# ServeExecutor under fault plans
+# ---------------------------------------------------------------------------
+CHAT = serve_model_from_task(cm.ModelTask("Chat-34B", 34e9, 60, 7168),
+                             name="chat-34b", decode_efficiency=0.01)
+
+
+def _trace(graph, seed=0, rate=2.0, horizon=40.0):
+    regions = tuple(sorted({m.region for m in graph.machines}))
+    cfg = TrafficConfig(rate_rps=rate, horizon_s=horizon, regions=regions,
+                        mixes=(ModelMix("chat-34b", prompt_median=96.0,
+                                        gen_median=32.0),))
+    return generate(cfg, seed=seed)
+
+
+def _serve(plan=None, seed=0, **kw):
+    g = paper_fig1_graph(seed)
+    ex = ServeExecutor(g, CHAT, _trace(g, seed), "least_loaded",
+                       n_replicas=3, fault_plan=plan, seed=seed, **kw)
+    return ex, ex.run()
+
+
+def test_fault_fracs_shim_is_bit_identical():
+    """The legacy fields and their compiled plan produce byte-identical
+    runs - the shim really is the same mechanism."""
+    g = paper_fig1_graph(0)
+    tr = _trace(g)
+    old = ServeExecutor(g, CHAT, tr, "least_loaded", n_replicas=3,
+                        fault_fracs=(0.5,), kills_per_fault=1, seed=0)
+    raw_old = old.run()
+    new = ServeExecutor(g, CHAT, tr, "least_loaded", n_replicas=3,
+                        fault_plan=fm.plan_from_fracs((0.5,)), seed=0)
+    raw_new = new.run()
+    assert canonical_records(raw_old) == canonical_records(raw_new)
+    assert old.scale_log == new.scale_log
+
+
+def test_machine_level_crash_and_recovery_in_serving():
+    # learn the replica hosts from a fault-free twin (same seed => same
+    # placement), then crash one of them at machine level
+    probe, _ = _serve()
+    host = sorted(probe.replicas)[0]
+    plan = fm.FaultPlan((fm.MachineCrash(at=0.4, machines=(host,),
+                                         recover_after=0.2),))
+    rec = obs_mod.Recorder()
+    ex, raw = _serve(plan, obs=rec)
+    events = [(e["event"], e["machine"]) for e in ex.scale_log]
+    assert ("machine_crashed", host) in events
+    assert ("machine_recovered", host) in events
+    counts = check_invariants(raw, rec)
+    assert counts["completed"] > 0
+    c = rec.metrics.snapshot()["counters"]
+    assert c["faults.injected"] >= 1
+    assert c["faults.recoveries"] >= 1
+
+
+def test_gray_failure_slows_serving():
+    probe, base_raw = _serve()
+    hosts = tuple(sorted(probe.replicas))
+    plan = fm.FaultPlan((fm.GrayFailure(at=0.0, machines=hosts,
+                                        slowdown=25.0),))
+    _, slow_raw = _serve(plan)
+
+    def mean_lat(raw):
+        lats = [r.latency_s for r in raw["records"].values()
+                if r.latency_s is not None]
+        return float(np.mean(lats))
+    assert mean_lat(slow_raw) > 2.0 * mean_lat(base_raw)
+
+
+def test_partition_heals_and_run_is_deterministic():
+    plan = fm.FaultPlan((
+        fm.RegionPartition(at=0.2, duration=0.3, regions=("Tokyo",)),
+        fm.LinkDegradation(at=0.1, duration=0.5,
+                           regions=("Beijing", "California"),
+                           bw_factor=0.3, lat_factor=2.0),
+    ))
+    _, a = _serve(plan)
+    _, b = _serve(plan)
+    assert canonical_records(a) == canonical_records(b)
+    check_invariants(a)
+
+
+# ---------------------------------------------------------------------------
+# FleetSimulation (training) under fault plans
+# ---------------------------------------------------------------------------
+def test_fleet_crash_replan_then_rejoin():
+    g = random_fleet(12, seed=2)
+    plan = fm.FaultPlan((fm.MachineCrash(at=0.4, kills=2,
+                                         recover_after=0.2),))
+
+    def run():
+        placer = FullFleetPlacer("gpipe", [cm.GPT2_1_5B], "B")
+        return FleetSimulation(g, [cm.GPT2_1_5B], placer, steps=3,
+                               fault_plan=plan, seed=5,
+                               concurrent=False).run()
+    res = run()
+    kills = [r for r in res.replans if "killed" in r]
+    joins = [r for r in res.replans if "rejoined" in r]
+    assert len(kills) == 1 and len(kills[0]["killed"]) == 2
+    assert len(joins) == 1 and len(joins[0]["rejoined"]) == 2
+    assert np.isfinite(res.makespan)
+    assert res.per_task[cm.GPT2_1_5B.name]["failed"] is False
+    assert res.makespan == run().makespan   # deterministic replay
+
+
+def test_fleet_partition_stalls_but_completes():
+    g = random_fleet(10, seed=3)
+    region = g.machines[0].region
+    plan = fm.FaultPlan((fm.RegionPartition(at=0.3, duration=0.2,
+                                            regions=(region,)),))
+    placer = FullFleetPlacer("gpipe", [cm.GPT2_1_5B], "B")
+    res = FleetSimulation(g, [cm.GPT2_1_5B], placer, steps=2,
+                          fault_plan=plan, seed=1, concurrent=False).run()
+    assert np.isfinite(res.makespan)
+    assert res.per_task[cm.GPT2_1_5B.name]["failed"] is False
+
+
+# ---------------------------------------------------------------------------
+# Registry isolation helpers
+# ---------------------------------------------------------------------------
+def _throwaway_scenario(name="throwaway_case"):
+    base = sc.get_scenario(sorted(sc.SCENARIOS)[0])
+    return dataclasses.replace(base, name=name)
+
+
+def _throwaway_serve(name="throwaway_serve_case"):
+    base = sc.get_serve_scenario(sorted(sc.SERVE_SCENARIOS)[0])
+    return dataclasses.replace(base, name=name)
+
+
+def test_unregister_is_idempotent():
+    scn = _throwaway_scenario()
+    sc.register(scn)
+    assert scn.name in sc.SCENARIOS
+    sc.unregister(scn.name)
+    assert scn.name not in sc.SCENARIOS
+    sc.unregister(scn.name)                  # unknown name: no-op
+    sc.unregister_serve("never_registered")  # same on the serve registry
+
+
+def test_temporary_registration_scopes_both_kinds():
+    t, s = _throwaway_scenario(), _throwaway_serve()
+    with sc.temporary_registration(t, s):
+        assert sc.get_scenario(t.name) is t
+        assert sc.get_serve_scenario(s.name) is s
+    assert t.name not in sc.SCENARIOS
+    assert s.name not in sc.SERVE_SCENARIOS
+
+
+def test_temporary_registration_cleans_up_on_exception():
+    t = _throwaway_scenario()
+    with pytest.raises(RuntimeError):
+        with sc.temporary_registration(t):
+            raise RuntimeError("boom")
+    assert t.name not in sc.SCENARIOS
+
+
+def test_temporary_registration_rejects_unknown_types():
+    with pytest.raises(TypeError):
+        with sc.temporary_registration(object()):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# Chaos fuzzer smoke (the CI job runs 10+ seeds; keep the tier-1 copy small)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1])
+def test_chaos_fuzzer_invariants_hold(seed):
+    out = fuzz_one(seed, check_planes=False)
+    for tag in ("naive", "resilient"):
+        counts = out[tag]
+        assert counts["offered"] > 0
+        assert counts["completed"] + counts["dropped"] \
+            + counts["unresolved"] == counts["offered"]
