@@ -1,0 +1,264 @@
+"""CI perf-regression gate: fresh smoke run vs committed BENCH baselines.
+
+The committed ``BENCH_*.smoke.json`` artifacts are provenance-stamped records
+of what the code produced at the commit that wrote them. Every gated metric
+is **simulated** (latencies, goodput, SLO rates in sim seconds, calibration
+relative error) — machine-independent and deterministic for a fixed seed —
+so CI can compare a fresh smoke run against the committed file with tight
+tolerances without caring how noisy the runner is. Wall-clock numbers are
+deliberately not gated.
+
+    PYTHONPATH=src python -m benchmarks.check_regression                # run smoke, compare
+    PYTHONPATH=src python -m benchmarks.check_regression --fresh f.json # compare a saved run
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --inject-regression 0.2 --expect-regression                    # gate self-test
+
+Exit status: 0 = all gates pass, 1 = regression detected (inverted under
+``--expect-regression``), 2 = malformed input / missing metric.
+
+Gate semantics per metric ``direction``:
+
+* ``lower``  (latency, violation rate): regression iff
+  ``fresh > base * (1 + rel_tol) + abs_tol``
+* ``higher`` (goodput): regression iff
+  ``fresh < base * (1 - rel_tol) - abs_tol``
+* ``ceiling`` (calibration error): regression iff ``fresh > abs_max`` —
+  an absolute bound, no baseline value involved.
+
+Tolerances are documented in docs/BENCHMARKS.md; in practice the serve smoke
+reproduces the committed baseline bit-identically on any machine with the
+pinned jax, so the tolerances only absorb float-library drift — every
+``rel_tol`` sits well under the 20% injected-regression self-test.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Iterator, Optional
+
+HERE = os.path.dirname(__file__)
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    """One gated metric: a dotted path into the artifact (``*`` wildcards a
+    dict level), a direction, and tolerances."""
+    path: str
+    direction: str            # "lower" | "higher" | "ceiling"
+    rel_tol: float = 0.0
+    abs_tol: float = 0.0
+    abs_max: Optional[float] = None   # ceiling gates only
+
+    def is_regression(self, base: Optional[float], fresh: float) -> bool:
+        if self.direction == "ceiling":
+            return fresh > self.abs_max
+        assert base is not None
+        if self.direction == "lower":
+            return fresh > base * (1.0 + self.rel_tol) + self.abs_tol
+        if self.direction == "higher":
+            return fresh < base * (1.0 - self.rel_tol) - self.abs_tol
+        raise ValueError(f"unknown direction {self.direction!r}")
+
+
+# Per-artifact gate sets. The serve smoke is the primary perf artifact: every
+# policy x scenario cell's latency/goodput/SLO plus the calibration contract.
+# hulk rows get a slightly wider latency band — the GNN router's scores are
+# jax float math, the one place BLAS/platform variation could nudge a tie.
+GATES = {
+    "serve": [
+        Gate("calibration.rel_error", "ceiling", abs_max=0.01),
+        Gate("scenarios.*.nearest.p95_s", "lower", rel_tol=0.10,
+             abs_tol=0.05),
+        Gate("scenarios.*.least_loaded.p95_s", "lower", rel_tol=0.10,
+             abs_tol=0.05),
+        Gate("scenarios.*.hulk.p95_s", "lower", rel_tol=0.15, abs_tol=0.05),
+        Gate("scenarios.*.nearest.goodput_rps", "higher", rel_tol=0.10,
+             abs_tol=0.01),
+        Gate("scenarios.*.least_loaded.goodput_rps", "higher", rel_tol=0.10,
+             abs_tol=0.01),
+        Gate("scenarios.*.hulk.goodput_rps", "higher", rel_tol=0.10,
+             abs_tol=0.01),
+        Gate("scenarios.*.nearest.slo_violation_rate", "lower", rel_tol=0.0,
+             abs_tol=0.05),
+        Gate("scenarios.*.least_loaded.slo_violation_rate", "lower",
+             rel_tol=0.0, abs_tol=0.05),
+        Gate("scenarios.*.hulk.slo_violation_rate", "lower", rel_tol=0.0,
+             abs_tol=0.05),
+    ],
+}
+
+BASELINES = {
+    "serve": os.path.join(HERE, "BENCH_serve.smoke.json"),
+}
+
+
+class GateError(ValueError):
+    """Malformed artifact / missing gated metric (exit 2, not a regression)."""
+
+
+def resolve(doc: dict, path: str) -> Iterator[tuple[str, float]]:
+    """Yield ``(concrete_path, value)`` for a dotted path; ``*`` fans out
+    over the dict keys at that level (sorted, so output order is stable)."""
+    def walk(node, parts, prefix):
+        if not parts:
+            if not isinstance(node, (int, float)) or isinstance(node, bool):
+                raise GateError(f"{prefix}: gated value is not a number "
+                                f"({node!r})")
+            yield prefix, float(node)
+            return
+        head, rest = parts[0], parts[1:]
+        if not isinstance(node, dict):
+            raise GateError(f"{prefix}: expected object while resolving "
+                            f"{head!r}")
+        if head == "*":
+            for k in sorted(node):
+                yield from walk(node[k], rest, f"{prefix}.{k}" if prefix
+                                else k)
+        else:
+            if head not in node:
+                raise GateError(f"{prefix or '$'}: missing key {head!r}")
+            yield from walk(node[head], rest,
+                            f"{prefix}.{head}" if prefix else head)
+    yield from walk(doc, path.split("."), "")
+
+
+def check(baseline: dict, fresh: dict, gates: list[Gate]) -> list[dict]:
+    """Evaluate every gate; returns one finding per concrete metric. A
+    metric present in the baseline but missing from the fresh run is an
+    error (a silently dropped scenario must not pass the gate)."""
+    findings = []
+    for g in gates:
+        fresh_vals = dict(resolve(fresh, g.path))
+        if g.direction == "ceiling":
+            for p, v in fresh_vals.items():
+                findings.append({
+                    "path": p, "direction": g.direction, "base": None,
+                    "fresh": v, "limit": g.abs_max,
+                    "regression": g.is_regression(None, v)})
+            continue
+        for p, base_v in resolve(baseline, g.path):
+            if p not in fresh_vals:
+                raise GateError(f"{p}: present in baseline but missing from "
+                                f"fresh run")
+            fresh_v = fresh_vals[p]
+            lim = (base_v * (1.0 + g.rel_tol) + g.abs_tol
+                   if g.direction == "lower"
+                   else base_v * (1.0 - g.rel_tol) - g.abs_tol)
+            findings.append({
+                "path": p, "direction": g.direction, "base": base_v,
+                "fresh": fresh_v, "limit": lim,
+                "regression": g.is_regression(base_v, fresh_v)})
+    return findings
+
+
+def inject_regression(doc: dict, gates: list[Gate], factor: float) -> dict:
+    """Perturb every gated metric adversely by ``factor`` (0.2 = 20% worse)
+    — the self-test proving the gate actually fails when perf regresses.
+    Ceiling gates are pushed past their bound the same way."""
+    doc = json.loads(json.dumps(doc))   # deep copy
+
+    def set_path(path: str, value: float) -> None:
+        parts = path.split(".")
+        node = doc
+        for h in parts[:-1]:
+            node = node[h]
+        node[parts[-1]] = value
+
+    for g in gates:
+        for p, v in list(resolve(doc, g.path)):
+            if g.direction == "higher":
+                set_path(p, v * (1.0 - factor))
+            elif g.direction == "lower":
+                set_path(p, v * (1.0 + factor) + 1e-9)
+            else:   # ceiling
+                set_path(p, max(v * (1.0 + factor), g.abs_max * (1 + factor)))
+    return doc
+
+
+def run_fresh_smoke(artifact: str, out_path: str, seed: int = 0) -> dict:
+    """Produce a fresh smoke artifact for ``artifact`` (the same call CI's
+    smoke jobs make, minus the file the repo commits)."""
+    if artifact == "serve":
+        sys.path.insert(0, HERE)
+        import serve_bench
+        return serve_bench.run_serve_bench(time_scale=0.4,
+                                           include_measured=False,
+                                           out_path=out_path, seed=seed)
+    raise GateError(f"no fresh-run recipe for artifact {artifact!r}")
+
+
+def report(findings: list[dict]) -> str:
+    lines = [f"{'metric':<58}{'base':>12}{'fresh':>12}{'limit':>12}  verdict",
+             "-" * 104]
+    for f in findings:
+        base = "-" if f["base"] is None else f"{f['base']:.4g}"
+        verdict = "REGRESSION" if f["regression"] else "ok"
+        lines.append(f"{f['path']:<58}{base:>12}{f['fresh']:>12.4g}"
+                     f"{f['limit']:>12.4g}  {verdict}")
+    n_bad = sum(1 for f in findings if f["regression"])
+    lines.append(f"{len(findings)} gates, {n_bad} regression(s)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.check_regression",
+        description="Compare a fresh smoke run against the committed "
+                    "BENCH baseline; exit 1 on perf regression.")
+    ap.add_argument("--artifact", default="serve", choices=sorted(GATES))
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (default: the committed "
+                         "BENCH_<artifact>.smoke.json)")
+    ap.add_argument("--fresh", default=None,
+                    help="pre-computed fresh artifact JSON; omitted = run "
+                         "the smoke benchmark now")
+    ap.add_argument("--out", default=None,
+                    help="where the fresh smoke run writes its artifact "
+                         "(default: a temp-ish path beside the baseline)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--inject-regression", type=float, default=None,
+                    metavar="F",
+                    help="perturb the fresh run's gated metrics adversely "
+                         "by F (e.g. 0.2) before checking — gate self-test")
+    ap.add_argument("--expect-regression", action="store_true",
+                    help="invert the exit meaning: succeed only if the gate "
+                         "DOES flag a regression")
+    args = ap.parse_args(argv)
+
+    gates = GATES[args.artifact]
+    base_path = args.baseline or BASELINES[args.artifact]
+    try:
+        with open(base_path) as f:
+            baseline = json.load(f)
+        if args.fresh is not None:
+            with open(args.fresh) as f:
+                fresh = json.load(f)
+        else:
+            out = args.out or os.path.join(
+                HERE, f"BENCH_{args.artifact}.fresh.json")
+            fresh = run_fresh_smoke(args.artifact, out, seed=args.seed)
+        if args.inject_regression is not None:
+            fresh = inject_regression(fresh, gates, args.inject_regression)
+        findings = check(baseline, fresh, gates)
+    except GateError as e:
+        print(f"check_regression ERROR: {e}", file=sys.stderr)
+        return 2
+    print(f"== regression gate: {args.artifact} "
+          f"(baseline {os.path.basename(base_path)}, provenance "
+          f"{baseline.get('provenance', {}).get('git_sha', '?')[:12]}) ==")
+    print(report(findings))
+    regressed = any(f["regression"] for f in findings)
+    if args.expect_regression:
+        if regressed:
+            print("expected regression detected: gate works")
+            return 0
+        print("ERROR: injected regression NOT detected", file=sys.stderr)
+        return 1
+    return 1 if regressed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

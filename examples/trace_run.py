@@ -104,6 +104,9 @@ def main(argv=None):
                     help="output path (default <scenario>.trace.json)")
     ap.add_argument("--check-determinism", action="store_true",
                     help="run twice, assert byte-identical traces")
+    ap.add_argument("--report", action="store_true",
+                    help="also print the trace analytics (attribution "
+                         "buckets + critical path / latency waterfalls)")
     args = ap.parse_args(argv)
 
     out = args.out or f"{args.scenario}.trace.json"
@@ -114,6 +117,9 @@ def main(argv=None):
         f.write(data)
 
     print(report.render(rec, title=f"{args.scenario} ({summary})"))
+    if args.report:
+        print()
+        print(report.render_trace(doc, title=args.scenario))
     print(f"\nlanes: {', '.join(schema.lanes(doc))}")
     print(f"wrote {out} ({len(data)} bytes, schema OK) — load it at "
           f"https://ui.perfetto.dev")

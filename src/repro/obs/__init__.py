@@ -32,14 +32,17 @@ import contextlib
 from typing import Callable, Iterator, Optional
 
 from repro.obs.metrics import (BYTES_BUCKETS, LATENCY_BUCKETS_S, Histogram,
-                               Metrics, NullMetrics, is_solver_specific)
+                               Metrics, NullMetrics, is_solver_specific,
+                               snapshot_diff)
 from repro.obs.trace import SCHEMA_VERSION, NullTracer, Span, Tracer
 
 __all__ = [
     "Recorder", "NullRecorder", "NULL", "current", "install", "recording",
     "Tracer", "NullTracer", "Span", "Metrics", "NullMetrics", "Histogram",
     "LATENCY_BUCKETS_S", "BYTES_BUCKETS", "SCHEMA_VERSION",
-    "is_solver_specific",
+    "is_solver_specific", "snapshot_diff",
+    "Attribution", "attribute", "critical_path", "latency_waterfall",
+    "trace_diff", "DriftMonitor", "DriftConfig", "Alert",
 ]
 
 
@@ -55,6 +58,11 @@ class Recorder:
     def bind_clock(self, clock: Callable[[], float]) -> None:
         """Point the tracer at a simulation clock (the engine calls this)."""
         self.trace.now = clock
+
+    def subscribe(self, fn: Callable) -> None:
+        """Stream every metric recording as ``fn(kind, name, value)`` —
+        what ``obs.monitors.DriftMonitor.attach`` wires up."""
+        self.metrics.subscribe(fn)
 
 
 class NullRecorder:
@@ -100,3 +108,13 @@ def recording(rec) -> Iterator:
         yield rec
     finally:
         _CURRENT = prev
+
+
+# Analysis layer (pure functions of exported traces) and streaming monitors.
+# Imported last: both depend only on the primitives above, and re-exporting
+# them here gives the one-stop ``from repro import obs`` surface the examples
+# and benchmarks use.
+from repro.obs.analysis import (Attribution, attribute,  # noqa: E402
+                                critical_path, latency_waterfall)
+from repro.obs.analysis import diff as trace_diff  # noqa: E402
+from repro.obs.monitors import Alert, DriftConfig, DriftMonitor  # noqa: E402

@@ -38,6 +38,40 @@ def is_solver_specific(name: str) -> bool:
         or SOLVER_SPECIFIC_MARKER in name
 
 
+def snapshot_diff(a: dict, b: dict) -> dict:
+    """Structural diff of two ``Metrics.snapshot()`` dicts (``a`` is the
+    baseline). Counters and gauges diff numerically; histograms diff per
+    stat (count/sum/p50/p95/p99). Keys present on only one side appear with
+    the missing side treated as zero and are listed under ``only_a`` /
+    ``only_b`` so a disappeared metric can't hide as a zero delta. Identical
+    entries are omitted — an empty diff means identical snapshots."""
+    out: dict = {"counters": {}, "gauges": {}, "histograms": {},
+                 "only_a": [], "only_b": []}
+    for section in ("counters", "gauges"):
+        sa, sb = a.get(section, {}), b.get(section, {})
+        for k in sorted(set(sa) | set(sb)):
+            if k not in sa:
+                out["only_b"].append(f"{section}.{k}")
+            elif k not in sb:
+                out["only_a"].append(f"{section}.{k}")
+            d = sb.get(k, 0) - sa.get(k, 0)
+            if d != 0:
+                out[section][k] = d
+    ha, hb = a.get("histograms", {}), b.get("histograms", {})
+    for k in sorted(set(ha) | set(hb)):
+        if k not in ha:
+            out["only_b"].append(f"histograms.{k}")
+        elif k not in hb:
+            out["only_a"].append(f"histograms.{k}")
+        da, db = ha.get(k, {}), hb.get(k, {})
+        d = {stat: db.get(stat, 0) - da.get(stat, 0)
+             for stat in ("count", "sum", "p50", "p95", "p99")
+             if db.get(stat, 0) != da.get(stat, 0)}
+        if d:
+            out["histograms"][k] = d
+    return out
+
+
 class Histogram:
     __slots__ = ("buckets", "counts", "count", "sum", "min", "max")
 
@@ -81,6 +115,22 @@ class Histogram:
                 return self.max
         return self.max
 
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold ``other`` into this histogram in place (bench cells and
+        windowed monitors aggregate per-shard histograms this way). Bucket
+        edges must match — merging snapshots (``as_dict`` output) is
+        impossible because they drop the per-bucket counts."""
+        if other.buckets != self.buckets:
+            raise ValueError("cannot merge histograms with different buckets")
+        for k, c in enumerate(other.counts):
+            self.counts[k] += c
+        self.count += other.count
+        self.sum += other.sum
+        if other.count:
+            self.min = min(self.min, other.min)
+            self.max = max(self.max, other.max)
+        return self
+
     def as_dict(self) -> dict:
         return {
             "count": self.count,
@@ -98,10 +148,17 @@ class Metrics:
         self._counters: dict[str, int] = {}
         self._gauges: dict[str, float] = {}
         self._hists: dict[str, Histogram] = {}
+        # streaming subscribers (obs.monitors); empty on every registry that
+        # has no monitor attached, so the common recording path pays one
+        # truthiness check
+        self._listeners: list = []
 
     # -- recording -----------------------------------------------------------
     def inc(self, name: str, n: int = 1) -> None:
         self._counters[name] = self._counters.get(name, 0) + int(n)
+        if self._listeners:
+            for fn in self._listeners:
+                fn("inc", name, n)
 
     def gauge(self, name: str, v: float) -> None:
         self._gauges[name] = float(v)
@@ -117,6 +174,33 @@ class Metrics:
         if h is None:
             h = self._hists[name] = Histogram(buckets or LATENCY_BUCKETS_S)
         h.observe(v)
+        if self._listeners:
+            for fn in self._listeners:
+                fn("observe", name, v)
+
+    def subscribe(self, fn) -> None:
+        """Stream every ``inc``/``observe`` as ``fn(kind, name, value)`` —
+        the hook ``obs.monitors.DriftMonitor`` attaches through. Only exists
+        on the enabled registry: a ``NullMetrics`` can't forward anything,
+        which is how monitors keep the zero-call-when-disabled invariant."""
+        self._listeners.append(fn)
+
+    def merge(self, other: "Metrics") -> "Metrics":
+        """Fold another registry into this one in place: counters add,
+        gauges keep the max (a merged gauge is a high-water mark), histograms
+        bucket-merge. Listeners are not forwarded — merge is an offline
+        aggregation, not a recording event."""
+        for k, v in other._counters.items():
+            self._counters[k] = self._counters.get(k, 0) + v
+        for k, v in other._gauges.items():
+            if v > self._gauges.get(k, -math.inf):
+                self._gauges[k] = v
+        for k, h in other._hists.items():
+            mine = self._hists.get(k)
+            if mine is None:
+                mine = self._hists[k] = Histogram(h.buckets)
+            mine.merge(h)
+        return self
 
     # -- reading -------------------------------------------------------------
     def snapshot(self) -> dict:

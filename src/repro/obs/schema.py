@@ -91,9 +91,18 @@ def _check_event(ev, k: int) -> None:
         _fail(path, "args must be an object")
 
 
-def validate(trace: dict) -> None:
+def validate(trace: dict, strict: "bool | None" = None) -> None:
     """Raise ``TraceSchemaError`` unless ``trace`` conforms to TRACE_SCHEMA
-    plus the cross-event invariants (balanced async pairs, named lanes)."""
+    plus the cross-event invariants (balanced async pairs, named lanes).
+
+    ``strict`` controls the async-balance check. ``None`` (the default)
+    derives it from ``metadata.truncated``: a ring-buffered trace may have
+    evicted the ``"b"`` of a pair whose ``"e"`` survived, so unmatched ends
+    are tolerated there — but a dangling ``"b"`` (begin without end) is
+    still an error in both modes, because FIFO eviction can only drop a
+    prefix of the event stream and ``async_span`` emits b/e adjacently.
+    Pass ``strict=True`` to reject any imbalance (untruncated traces), or
+    ``strict=False`` to force the lenient window check."""
     if not isinstance(trace, dict):
         _fail("$", "trace is not an object")
     for key in TRACE_SCHEMA["required"]:
@@ -111,6 +120,8 @@ def validate(trace: dict) -> None:
     events = trace["traceEvents"]
     if not isinstance(events, list):
         _fail("traceEvents", "not an array")
+    if strict is None:
+        strict = not bool(meta.get("truncated"))
 
     named_pids: set[int] = set()
     open_async: dict[tuple, int] = {}
@@ -124,10 +135,18 @@ def validate(trace: dict) -> None:
         elif ev["ph"] == "e":
             key = (ev["pid"], ev.get("cat"), ev["id"], ev["name"])
             if open_async.get(key, 0) <= 0:
-                _fail(f"traceEvents[{k}]", f"async end without begin: {key}")
+                if strict:
+                    _fail(f"traceEvents[{k}]",
+                          f"async end without begin: {key}")
+                # lenient: the begin was ring-evicted; don't let the orphan
+                # end mask a later real imbalance on the same key
+                continue
             open_async[key] -= 1
     dangling = [k for k, v in open_async.items() if v != 0]
     if dangling:
+        # begins without ends are a recording bug in BOTH modes: eviction
+        # drops the oldest events first, so a surviving "b" implies its
+        # adjacent "e" survived too
         _fail("traceEvents", f"unbalanced async spans: {dangling[:3]}")
     used = {ev["pid"] for ev in events if ev["ph"] != "M"}
     unnamed = used - named_pids

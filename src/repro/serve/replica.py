@@ -187,6 +187,13 @@ class Replica:
                                     microbatch=0, tag=_TAG_SERVE)
         self.busy_s += dur
         self.batch_occupancy += dur * len(self.running)
+        if self._obs.enabled and work > 0:
+            # actual / zero-jitter duration: >1 under straggle, gray failure
+            # or jitter — the per-machine drift signal obs.monitors EWMAs
+            base = work / (float(self.compute.tflops[self.machine]) * 1e12)
+            if base > 0:
+                self._obs.metrics.observe(
+                    f"replica.slowdown.m{self.machine}", dur / base)
         self._iter_ev = self.sim.schedule(dur, self._finish_iteration)
 
     def _finish_iteration(self) -> None:

@@ -77,6 +77,12 @@ class Simulator:
     def bump_epoch(self) -> int:
         """Invalidate every epoch-pinned event currently in the heap."""
         self.epoch += 1
+        if self.obs.enabled:
+            # re-plan boundary: the causal edge between the aborted schedule
+            # and the restarted one (trace analytics anchor waits to it)
+            self.obs.metrics.inc("engine.epoch_bumps")
+            self.obs.trace.instant("engine/dispatch", "epoch_bump",
+                                   cat="engine", args={"epoch": self.epoch})
         return self.epoch
 
     def run(self, until: float = math.inf, max_events: int = 20_000_000) -> float:

@@ -398,10 +398,14 @@ class FleetSimulation:
             if self.obs.enabled:
                 # steps on one task are strictly sequential, so a complete
                 # (X) span per step is safe on the task's lane
+                # machines + strategy give trace analytics the causal edge
+                # from this step to whatever next occupies those machines
                 self.obs.trace.span_at(
                     f"task/{name}", f"step{run.steps_done - 1}",
                     t_start, self.sim.now, cat="train",
-                    args={"compute_s": comp_s, "comm_s": comm_s})
+                    args={"compute_s": comp_s, "comm_s": comm_s,
+                          "machines": [int(i) for i in pl.ids],
+                          "strategy": str(pl.strategy)})
                 self.obs.metrics.inc("sim.steps_done")
                 self.obs.metrics.observe("sim.step_s",
                                          self.sim.now - t_start)
@@ -494,6 +498,13 @@ class FleetSimulation:
                              rng.choice(pool, size=kills, replace=False))
         if not victims:
             return
+        if self.obs.enabled:
+            # one instant per victim: the bulk crash instant drops its
+            # machine list (tuple args are filtered), so downtime intervals
+            # need these to pair machine_down -> recover/rejoin per machine
+            for v in victims:
+                self.obs.trace.instant("faults", "machine_down", cat="fault",
+                                       args={"machine": int(v)})
         # capture the Machine objects BEFORE the graph compacts (the rejoin
         # needs them), keyed by original id so the map survives further
         # failures between crash and recovery

@@ -570,6 +570,14 @@ class ServeExecutor:
             machine_level = False
         if not victims:
             return
+        if self.obs.enabled:
+            # one instant per victim (the bulk crash instant's machine tuple
+            # is filtered out of its args); trace analytics pairs these with
+            # the per-machine "recover" instants into downtime intervals
+            for v in victims:
+                self.obs.trace.instant("faults", "machine_down", cat="fault",
+                                       args={"machine": int(v),
+                                             "machine_level": machine_level})
         interrupted = []
         hosted = set()
         for v in victims:
@@ -748,7 +756,9 @@ class ServeExecutor:
                 self.sim.now, cat="request",
                 args={"rid": req.rid, "region": req.region,
                       "machines": list(rec.machines),
-                      "n_routes": rec.n_routes})
+                      "n_routes": rec.n_routes,
+                      "prompt_tokens": req.prompt_tokens,
+                      "gen_tokens": req.gen_tokens})
         if self.autoscaler is not None and rec.latency_s is not None:
             self.autoscaler.observe_completion(rec.latency_s)
 

@@ -1,0 +1,175 @@
+"""repro.obs.monitors: streaming drift/SLO monitors over the metric stream.
+
+The DriftMonitor must (a) detect a gray-failure slowdown ramp online —
+rolling p95, per-machine EWMA slowdown, and SLO burn rate all fire; (b) keep
+the zero-call-when-disabled invariant (attaching to a NullRecorder
+subscribes to nothing); (c) never perturb the run it watches (byte-identical
+traces with and without a monitor); (d) produce a deterministic alert stream
+for same-seed runs.
+"""
+import numpy as np
+
+from repro import obs
+from repro.core import cost_model as cm
+from repro.core.graph import ClusterGraph, Machine
+from repro.obs.monitors import Alert, DriftConfig, DriftMonitor
+from repro.serve import TrafficConfig, ModelMix, generate, \
+    serve_model_from_task
+from repro.sim import FaultPlan, GrayFailure, ServeExecutor
+
+CHAT = serve_model_from_task(cm.ModelTask("Chat-34B", 34e9, 60, 7168),
+                             name="chat-34b", decode_efficiency=0.01)
+MIX = (ModelMix("chat-34b", prompt_median=64.0, gen_median=24.0),)
+
+# replicas land on machines 1 and 2 (StaticPlacement picks the A100 hosts;
+# machine 0 is the edge box) — the gray failure must target the hosts
+# explicitly; random picks can miss them
+GRAY = FaultPlan((GrayFailure(at=0.3, machines=(1, 2), slowdown=8.0,
+                              ramp=0.3, ramp_steps=4),))
+
+# healthy p95 is ~0.22s with zero drops; the 8x gray ramp pushes p95 to
+# ~7.8s, so every threshold separates the two runs cleanly
+CFG = DriftConfig(window_s=30.0, min_samples=5, cooldown_s=10.0,
+                  rolling_p95_threshold_s=2.0,
+                  slowdown_threshold=1.5,
+                  slo_s=1.5, slo_budget=0.05, burn_rate_threshold=1.5)
+
+
+def _star_graph():
+    machines = [Machine.from_caps("London", capability=7.0, memory_gb=32.0,
+                                  tflops=500.0, label="edge"),
+                Machine("Paris", "A100", 8), Machine("Tokyo", "A100", 8)]
+    lat = np.array([[0, 10, 200], [10, 0, 210], [200, 210, 0]], np.float32)
+    return ClusterGraph(machines, lat)
+
+
+def _run(rec=None, monitor=None, plan=GRAY, seed=0):
+    g = _star_graph()
+    trace = generate(TrafficConfig(rate_rps=4.0, horizon_s=40.0,
+                                   regions=("London",), mixes=MIX), seed=2)
+    if monitor is not None and rec is not None:
+        monitor.attach(rec)
+    return ServeExecutor(g, CHAT, trace, "least_loaded", n_replicas=2,
+                         fault_plan=plan, seed=seed, obs=rec).run()
+
+
+def test_gray_ramp_fires_all_signals():
+    mon = DriftMonitor(CFG)
+    _run(rec=obs.Recorder(), monitor=mon)
+    kinds = {a.kind for a in mon.alerts}
+    assert kinds == {"rolling_p95", "slowdown", "slo_burn"}
+    # the slowed machines are identified by id
+    slowed = {a.key for a in mon.alerts if a.kind == "slowdown"}
+    assert slowed <= {"1", "2"} and slowed
+    for a in mon.alerts:
+        assert a.value > a.threshold
+    s = mon.summary()
+    assert s["n_alerts"] == len(mon.alerts)
+    assert max(s["slowdown_ewma"].values()) > CFG.slowdown_threshold
+
+
+def test_healthy_run_stays_quiet():
+    mon = DriftMonitor(CFG)
+    _run(rec=obs.Recorder(), monitor=mon, plan=None)
+    assert mon.alerts == []
+    assert mon.burn_rate() <= CFG.burn_rate_threshold
+    for m in (1, 2):
+        assert mon.slowdown(m) < CFG.slowdown_threshold
+
+
+def test_on_alert_callback_sees_every_alert():
+    seen = []
+    mon = DriftMonitor(CFG, on_alert=seen.append)
+    _run(rec=obs.Recorder(), monitor=mon)
+    assert seen == mon.alerts
+    assert all(isinstance(a, Alert) for a in seen)
+
+
+def test_alert_stream_is_deterministic():
+    streams = []
+    for _ in range(2):
+        mon = DriftMonitor(CFG)
+        _run(rec=obs.Recorder(), monitor=mon)
+        streams.append([a.to_dict() for a in mon.alerts])
+    assert streams[0] == streams[1]
+    assert streams[0]                        # non-vacuous
+
+
+def test_cooldown_rate_limits_each_signal():
+    mon = DriftMonitor(CFG)
+    _run(rec=obs.Recorder(), monitor=mon)
+    by_key = {}
+    for a in mon.alerts:
+        by_key.setdefault((a.kind, a.key), []).append(a.t)
+    for times in by_key.values():
+        for t0, t1 in zip(times, times[1:]):
+            assert t1 - t0 >= CFG.cooldown_s
+
+
+def test_attach_to_disabled_recorder_is_a_no_op():
+    null = obs.NullRecorder()
+    mon = DriftMonitor(CFG)
+    assert mon.attach(null) is mon
+    assert mon.attached is False
+    assert null.calls == 0                   # attach made zero recorder calls
+    _run(rec=None, monitor=None)             # hot loop with obs defaulted off
+    assert mon.alerts == []
+
+
+def test_monitoring_does_not_perturb_results():
+    rec_plain = obs.Recorder()
+    plain = _run(rec=rec_plain)
+    rec_mon = obs.Recorder()
+    mon = DriftMonitor(CFG)
+    watched = _run(rec=rec_mon, monitor=mon)
+    assert mon.alerts                        # the monitor actually engaged
+    assert rec_plain.trace.json_bytes() == rec_mon.trace.json_bytes()
+    assert plain["n_events"] == watched["n_events"]
+    assert plain["end_s"] == watched["end_s"]
+    for rid, r in plain["records"].items():
+        assert watched["records"][rid].latency_s == r.latency_s
+
+
+def test_windowing_and_burn_rate_unit():
+    # drive the stream by hand on a fake clock: 10 fast then 10 slow requests
+    rec = obs.Recorder()
+    t = [0.0]
+    rec.bind_clock(lambda: t[0])
+    mon = DriftMonitor(DriftConfig(window_s=50.0, min_samples=3,
+                                   cooldown_s=0.0, slo_s=1.0,
+                                   slo_budget=0.10,
+                                   burn_rate_threshold=2.0)).attach(rec)
+    assert mon.attached
+    for k in range(10):
+        t[0] = float(k)
+        rec.metrics.observe("serve.latency_s", 0.5)
+    assert mon.burn_rate() == 0.0 and mon.alerts == []
+    for k in range(10, 20):
+        t[0] = float(k)
+        rec.metrics.observe("serve.latency_s", 2.0)
+    # 10 of 20 windowed requests violate a 10% budget: burn rate 5x
+    assert mon.burn_rate() == 5.0
+    assert any(a.kind == "slo_burn" for a in mon.alerts)
+    # dropped requests burn budget too
+    before = mon.burn_rate()
+    rec.metrics.inc("serve.dropped", 5)
+    assert mon.burn_rate() > before
+    # advancing the clock past the window forgets the excursion
+    t[0] = 100.0
+    rec.metrics.observe("serve.latency_s", 0.5)
+    assert mon.burn_rate() < 1.0
+
+
+def test_slowdown_ewma_unit():
+    rec = obs.Recorder()
+    rec.bind_clock(lambda: 1.0)
+    mon = DriftMonitor(DriftConfig(min_samples=2, cooldown_s=0.0,
+                                   slowdown_threshold=2.0,
+                                   slowdown_alpha=0.5)).attach(rec)
+    rec.metrics.observe("replica.slowdown.m3", 1.0)
+    assert mon.slowdown(3) == 1.0
+    rec.metrics.observe("replica.slowdown.m3", 5.0)   # ewma -> 3.0
+    assert mon.slowdown(3) == 3.0
+    assert [a.kind for a in mon.alerts] == ["slowdown"]
+    assert mon.alerts[0].key == "3"
+    assert mon.slowdown(99) == 1.0                    # unseen machine: nominal

@@ -85,6 +85,61 @@ def test_gauges_and_gauge_max():
     assert snap == {"x": 1.0, "y": 5.0}
 
 
+def test_snapshot_diff_reports_only_changes():
+    a = Metrics()
+    b = Metrics()
+    for m in (a, b):
+        m.inc("same", 5)
+        m.gauge("g", 1.0)
+        m.observe("h", 0.5)
+    assert obs.snapshot_diff(a.snapshot(), b.snapshot()) == {
+        "counters": {}, "gauges": {}, "histograms": {},
+        "only_a": [], "only_b": []}
+    b.inc("same", 2)
+    b.inc("new", 1)
+    b.gauge("g", 3.0)
+    b.observe("h", 100.0)
+    a.inc("gone")
+    d = obs.snapshot_diff(a.snapshot(), b.snapshot())
+    assert d["counters"]["same"] == 2
+    assert d["gauges"]["g"] == 2.0
+    assert d["histograms"]["h"]["count"] == 1
+    # a disappeared/appeared metric is listed, never a silent zero delta
+    assert d["only_a"] == ["counters.gone"] and d["only_b"] == ["counters.new"]
+
+
+def test_histogram_merge_matches_combined_stream():
+    edges = (1.0, 2.0, 4.0, 8.0)
+    xs, ys = (0.5, 1.5, 3.0), (1.5, 7.0, 100.0)
+    ha, hb, both = Histogram(edges), Histogram(edges), Histogram(edges)
+    for v in xs:
+        ha.observe(v)
+        both.observe(v)
+    for v in ys:
+        hb.observe(v)
+        both.observe(v)
+    ha.merge(hb)
+    assert ha.as_dict() == both.as_dict()
+    assert ha.counts == both.counts
+    with pytest.raises(ValueError):            # edge mismatch is impossible
+        ha.merge(Histogram((1.0, 2.0)))
+
+
+def test_metrics_merge_semantics():
+    a, b = Metrics(), Metrics()
+    a.inc("c", 3)
+    b.inc("c", 4)
+    b.inc("only_b")
+    a.gauge("g", 2.0)
+    b.gauge("g", 1.0)
+    a.observe("h", 0.5)
+    b.observe("h", 2.0)
+    snap = a.merge(b).snapshot()
+    assert snap["counters"] == {"c": 7, "only_b": 1}
+    assert snap["gauges"]["g"] == 2.0          # merged gauge = high-water mark
+    assert snap["histograms"]["h"]["count"] == 2
+
+
 def test_solver_specific_naming_convention():
     assert is_solver_specific("engine.events_dispatched")
     assert is_solver_specific("net.solver.solves")
@@ -127,6 +182,42 @@ def test_schema_rejects_malformed_docs():
                                "id": "s1", "ts": 0, "pid": 1, "tid": 0})
     with pytest.raises(schema.TraceSchemaError):   # unbalanced async pair
         schema.validate(doc)
+
+
+def test_schema_accepts_ring_truncated_traces():
+    # FIFO eviction of adjacent b/e pairs can orphan an "e" (never a "b");
+    # an odd-sized ring forces one. Lenient mode applies automatically to
+    # truncated docs and still balances over the surviving window.
+    tr = Tracer(max_events=11)
+    for k in range(20):
+        tr.async_span("replica/0", "decode", f"s{k}", float(k),
+                      float(k) + 0.5)
+    doc = tr.to_chrome()
+    assert doc["metadata"]["truncated"] is True
+    schema.validate(doc)
+    with pytest.raises(schema.TraceSchemaError):   # orphan "e" in the window
+        schema.validate(doc, strict=True)
+    # a dangling "b" is malformed even for a truncated doc: eviction is FIFO,
+    # so a begin without its end can never come from the ring
+    doc["traceEvents"].append({"ph": "b", "name": "open", "cat": "x",
+                               "id": "dangle", "ts": 25_000_000,
+                               "pid": doc["traceEvents"][-1]["pid"],
+                               "tid": 0})
+    with pytest.raises(schema.TraceSchemaError):
+        schema.validate(doc)
+
+
+def test_schema_stays_strict_for_untruncated_traces():
+    tr = Tracer()                               # unbounded: nothing evicted
+    tr.async_span("replica/0", "decode", "s0", 0.0, 1.0)
+    doc = tr.to_chrome()
+    doc["traceEvents"].append({"ph": "e", "name": "decode", "cat": "span",
+                               "id": "orphan", "ts": 2_000_000,
+                               "pid": doc["traceEvents"][-1]["pid"],
+                               "tid": 0})
+    with pytest.raises(schema.TraceSchemaError):
+        schema.validate(doc)                    # orphan end, not truncated
+    schema.validate(doc, strict=False)          # explicit opt-out allowed
 
 
 def test_same_seed_serve_traces_are_byte_identical():

@@ -1,0 +1,178 @@
+"""benchmarks/check_regression.py: the CI perf-regression gate.
+
+The gate compares a fresh smoke artifact against the committed,
+provenance-stamped baseline with per-metric tolerances. Pins: identical
+artifacts pass, a 20% injected regression fails every gate, wildcard paths
+resolve deterministically, a metric that silently disappears is an error
+(exit 2) rather than a pass, and the committed BENCH_serve.smoke.json still
+contains every gated path.
+"""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.check_regression import (BASELINES, GATES, Gate, GateError,
+                                         check, inject_regression, main,
+                                         resolve)
+
+SERVE_GATES = GATES["serve"]
+
+
+def _doc():
+    cell = {"p95_s": 2.0, "goodput_rps": 3.5, "slo_violation_rate": 0.01}
+    return {
+        "calibration": {"rel_error": 0.001},
+        "scenarios": {
+            "s_a": {p: dict(cell) for p in
+                    ("nearest", "least_loaded", "hulk")},
+            "s_b": {p: dict(cell) for p in
+                    ("nearest", "least_loaded", "hulk")},
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Gate semantics
+# ---------------------------------------------------------------------------
+def test_direction_semantics():
+    lower = Gate("x", "lower", rel_tol=0.10, abs_tol=0.0)
+    assert not lower.is_regression(10.0, 10.0)
+    assert not lower.is_regression(10.0, 11.0)     # exactly at the bound
+    assert lower.is_regression(10.0, 11.01)
+    higher = Gate("x", "higher", rel_tol=0.10, abs_tol=0.0)
+    assert not higher.is_regression(10.0, 9.0)
+    assert higher.is_regression(10.0, 8.99)
+    ceiling = Gate("x", "ceiling", abs_max=0.01)
+    assert not ceiling.is_regression(None, 0.01)
+    assert ceiling.is_regression(None, 0.011)
+
+
+def test_abs_tol_floors_tiny_baselines():
+    # a 0-valued baseline with rel_tol alone would flag any nonzero fresh
+    g = Gate("x", "lower", rel_tol=0.0, abs_tol=0.05)
+    assert not g.is_regression(0.0, 0.05)
+    assert g.is_regression(0.0, 0.06)
+
+
+def test_wildcard_resolution_is_sorted_and_concrete():
+    doc = _doc()
+    got = list(resolve(doc, "scenarios.*.hulk.p95_s"))
+    assert got == [("scenarios.s_a.hulk.p95_s", 2.0),
+                   ("scenarios.s_b.hulk.p95_s", 2.0)]
+    assert list(resolve(doc, "calibration.rel_error")) == \
+        [("calibration.rel_error", 0.001)]
+
+
+def test_resolve_rejects_missing_and_non_numeric():
+    with pytest.raises(GateError):
+        list(resolve(_doc(), "calibration.nope"))
+    bad = _doc()
+    bad["calibration"]["rel_error"] = "fast"
+    with pytest.raises(GateError):
+        list(resolve(bad, "calibration.rel_error"))
+
+
+# ---------------------------------------------------------------------------
+# check()
+# ---------------------------------------------------------------------------
+def test_identical_artifacts_pass_every_gate():
+    doc = _doc()
+    findings = check(doc, copy.deepcopy(doc), SERVE_GATES)
+    assert findings and not any(f["regression"] for f in findings)
+    # 2 scenarios x 3 policies x 3 metrics + 1 calibration ceiling
+    assert len(findings) == 19
+
+
+def test_injected_20pct_regression_fails_the_gate():
+    doc = _doc()
+    worse = inject_regression(doc, SERVE_GATES, 0.2)
+    assert worse is not doc and _doc() == doc      # input untouched
+    findings = check(doc, worse, SERVE_GATES)
+    by_metric = {}
+    for f in findings:
+        by_metric.setdefault(f["path"].rsplit(".", 1)[-1], []).append(f)
+    # every latency/goodput/calibration gate trips at 20%; the violation-rate
+    # gates carry an abs_tol floor (0.05) that deliberately absorbs a 20%
+    # relative bump on a near-zero baseline rate
+    for metric in ("p95_s", "goodput_rps", "rel_error"):
+        assert all(f["regression"] for f in by_metric[metric]), metric
+    assert any(f["regression"] for f in findings)
+    # a violation-rate jump past the absolute floor does trip
+    fresh = copy.deepcopy(doc)
+    fresh["scenarios"]["s_a"]["nearest"]["slo_violation_rate"] = 0.07
+    trips = [f for f in check(doc, fresh, SERVE_GATES) if f["regression"]]
+    assert [f["path"] for f in trips] == \
+        ["scenarios.s_a.nearest.slo_violation_rate"]
+
+
+def test_single_metric_regression_is_isolated():
+    doc = _doc()
+    fresh = copy.deepcopy(doc)
+    fresh["scenarios"]["s_b"]["hulk"]["goodput_rps"] *= 0.5
+    findings = check(doc, fresh, SERVE_GATES)
+    bad = [f["path"] for f in findings if f["regression"]]
+    assert bad == ["scenarios.s_b.hulk.goodput_rps"]
+
+
+def test_missing_fresh_metric_is_an_error_not_a_pass():
+    doc = _doc()
+    fresh = copy.deepcopy(doc)
+    del fresh["scenarios"]["s_b"]                  # scenario silently dropped
+    with pytest.raises(GateError):
+        check(doc, fresh, SERVE_GATES)
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes
+# ---------------------------------------------------------------------------
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_cli_pass_fail_and_selftest(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _doc())
+    fresh = _write(tmp_path, "fresh.json", _doc())
+    argv = ["--artifact", "serve", "--baseline", base, "--fresh", fresh]
+    assert main(argv) == 0
+    assert "0 regression(s)" in capsys.readouterr().out
+    assert main(argv + ["--inject-regression", "0.2"]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+    # self-test mode: detecting the injected regression is a success...
+    assert main(argv + ["--inject-regression", "0.2",
+                        "--expect-regression"]) == 0
+    capsys.readouterr()
+    # ...and NOT detecting one is a failure of the gate itself
+    assert main(argv + ["--expect-regression"]) == 1
+
+
+def test_cli_malformed_input_exits_2(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _doc())
+    broken = _doc()
+    del broken["calibration"]
+    fresh = _write(tmp_path, "broken.json", broken)
+    assert main(["--baseline", base, "--fresh", fresh]) == 2
+
+
+# ---------------------------------------------------------------------------
+# Committed baseline stays gateable
+# ---------------------------------------------------------------------------
+def test_committed_serve_baseline_contains_every_gated_path():
+    with open(BASELINES["serve"]) as f:
+        baseline = json.load(f)
+    n = 0
+    for g in SERVE_GATES:
+        for path, v in resolve(baseline, g.path):   # raises if any missing
+            assert isinstance(v, float)
+            n += 1
+    # 3 scenarios x 3 policies x 3 metrics + calibration
+    assert n == 28
+    assert baseline["provenance"]["git_sha"]
+    # the gate compares like-for-like: identical baseline passes itself
+    findings = check(baseline, baseline, SERVE_GATES)
+    assert not any(f["regression"] for f in findings)
