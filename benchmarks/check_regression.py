@@ -88,10 +88,26 @@ GATES = {
         Gate("scenarios.*.hulk.slo_violation_rate", "lower", rel_tol=0.0,
              abs_tol=0.05),
     ],
+    # online re-planning: every arm's makespan is pure sim time and replays
+    # deterministically, so the bands only absorb float-library drift. The
+    # guarded arm additionally gates the win itself: a change that makes
+    # guarded slower than its committed baseline by >5% broke the
+    # controller's value proposition even if nothing crashed.
+    "online": [
+        Gate("scenarios.*.static.makespan_s", "lower", rel_tol=0.05,
+             abs_tol=0.5),
+        Gate("scenarios.*.guarded.makespan_s", "lower", rel_tol=0.05,
+             abs_tol=0.5),
+        Gate("scenarios.*.unguarded.makespan_s", "lower", rel_tol=0.05,
+             abs_tol=0.5),
+        Gate("scenarios.*.guarded.step_p95_s", "lower", rel_tol=0.10,
+             abs_tol=0.5),
+    ],
 }
 
 BASELINES = {
     "serve": os.path.join(HERE, "BENCH_serve.smoke.json"),
+    "online": os.path.join(HERE, "BENCH_online.smoke.json"),
 }
 
 
@@ -187,6 +203,10 @@ def run_fresh_smoke(artifact: str, out_path: str, seed: int = 0) -> dict:
         return serve_bench.run_serve_bench(time_scale=0.4,
                                            include_measured=False,
                                            out_path=out_path, seed=seed)
+    if artifact == "online":
+        sys.path.insert(0, HERE)
+        import online_bench
+        return online_bench.run_online_bench(out_path=out_path, seed=seed)
     raise GateError(f"no fresh-run recipe for artifact {artifact!r}")
 
 

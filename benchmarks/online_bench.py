@@ -1,0 +1,210 @@
+"""Online re-planning benchmark: static plan vs guarded controller vs
+replan-on-every-alert under drift.
+
+Drives ``sim.evaluate.run_drift_scenario`` over the ``DRIFT_SCENARIOS``
+registry (``sim.scenarios``), comparing three re-planning policies on
+identical runs (same fleet, same seed, same fault schedule — the delta is
+purely the control loop):
+
+* ``static``    — ``controller=None``: the t=0 plan rides out the drift
+  (bit-identical to a pre-controller run);
+* ``guarded``   — ``runtime.controller.ReplanController`` with the full
+  safety envelope: hysteresis, cooldown, the migration-priced improvement
+  gate, canary probation + rollback;
+* ``unguarded`` — the same drift thresholds with every guard disabled
+  (``ControllerConfig.unguarded``): commit on every single alert.
+
+Scenarios (see ``sim/scenarios.py``):
+
+* ``drift_gray_creep``   — two pipeline stages gray to 6x and stay there;
+  the telemetry-aware (sim-label) GNN + greedy polish evicts them;
+* ``drift_link_rot``     — the inter-region link under the pipeline rots
+  (30x latency, 3% bandwidth) for the rest of the run; re-planning
+  regroups onto a healthy region pair, pricing the parameter migration;
+* ``drift_flap_diurnal`` — diurnal traffic plus short self-recovering gray
+  bursts: the alert storm where acting is pure loss. The guarded gate
+  suppresses; unguarded thrashes through no-op commits and epoch restarts.
+
+Acceptance (asserted by ``check_result``): guarded beats static on
+makespan in >= 2 of 3 scenarios, beats unguarded in >= 1 (unguarded must
+visibly lose somewhere), zero controller errors, and every arm replays
+deterministically (double-run makespan + decision-log identity).
+
+``python -m benchmarks.online_bench --smoke`` runs the same matrix (it is
+already CI-sized) and writes BENCH_online.smoke.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+
+def _sys_path():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_online.json")
+SMOKE_OUT = os.path.join(os.path.dirname(__file__), "BENCH_online.smoke.json")
+
+MODES = ("static", "guarded", "unguarded")
+
+
+def _step_p95(res) -> float:
+    vals = sorted(t for d in res.per_task.values() for t in d["step_times"])
+    if not vals:
+        return math.nan
+    return vals[max(0, math.ceil(0.95 * len(vals)) - 1)]
+
+
+def _run_arm(scenario, mode: str, seed: int) -> dict:
+    from repro.sim import run_drift_scenario
+    res, ctl = run_drift_scenario(scenario, mode=mode, seed=seed)
+    row = {
+        "makespan_s": float(res.makespan),
+        "step_p95_s": float(_step_p95(res)),
+        "replans": len(res.replans),
+        "failed": sorted(t for t, d in res.per_task.items() if d["failed"]),
+    }
+    if ctl is not None:
+        s = ctl.summary()
+        row["controller"] = {k: s[k] for k in
+                             ("alerts", "replans", "rollbacks", "suppressed",
+                              "gate_rejects", "errors", "dead")}
+        row["controller"]["suppressed_by"] = s["suppressed_by"]
+    return row
+
+
+def _determinism(scenario, mode: str, seed: int, first: dict) -> bool:
+    rerun = _run_arm(scenario, mode, seed)
+    return rerun == first
+
+
+def scenario_comparison(seed: int = 0) -> dict:
+    from repro.sim import scenarios as sc
+    out: dict = {}
+    for name in sorted(sc.DRIFT_SCENARIOS):
+        scn = sc.get_drift_scenario(name)
+        arms = {mode: _run_arm(scn, mode, seed) for mode in MODES}
+        deterministic = all(_determinism(scn, mode, seed, arms[mode])
+                            for mode in MODES)
+        g = arms["guarded"]["makespan_s"]
+        s = arms["static"]["makespan_s"]
+        u = arms["unguarded"]["makespan_s"]
+        out[name] = {
+            **arms,
+            "guarded_beats_static": bool(g < s - 1e-9),
+            "guarded_beats_unguarded": bool(g < u - 1e-9),
+            "guarded_vs_static": _rel(s, g),
+            "guarded_vs_unguarded": _rel(u, g),
+            "deterministic": bool(deterministic),
+        }
+        print(f"  {name:<20} static {s:8.2f}s  guarded {g:8.2f}s  "
+              f"unguarded {u:8.2f}s  "
+              f"{'WIN' if out[name]['guarded_beats_static'] else 'tie/loss'}"
+              f" vs static", file=sys.stderr)
+    return out
+
+
+def _rel(base: float, new: float) -> float:
+    if not math.isfinite(base) or base <= 0:
+        return math.nan
+    return (base - new) / base
+
+
+def run_online_bench(out_path: str = OUT, seed: int = 0) -> dict:
+    from repro.sim import scenarios as sc
+    res = {
+        "artifact": "online_bench",
+        "config": {"seed": seed, "modes": list(MODES),
+                   "scenarios": sorted(sc.DRIFT_SCENARIOS),
+                   "steps": {n: sc.get_drift_scenario(n).steps
+                             for n in sorted(sc.DRIFT_SCENARIOS)}},
+    }
+    print("online re-planning scenarios:", file=sys.stderr)
+    res["scenarios"] = scenario_comparison(seed=seed)
+    rows = res["scenarios"].values()
+    wins_static = sum(1 for r in rows if r["guarded_beats_static"])
+    wins_unguarded = sum(1 for r in res["scenarios"].values()
+                         if r["guarded_beats_unguarded"])
+    res["derived"] = (f"guarded_beats_static={wins_static}/"
+                      f"{len(res['scenarios'])} "
+                      f"beats_unguarded={wins_unguarded}/"
+                      f"{len(res['scenarios'])}")
+    from benchmarks._provenance import stamp
+    stamp(res, seed=seed, solver_mode="fast")
+    with open(out_path, "w") as f:
+        json.dump(res, f, indent=1, default=float)
+    return res
+
+
+def check_result(res: dict) -> None:
+    """Schema + acceptance assertions the CI smoke job relies on."""
+    assert res["artifact"] == "online_bench"
+    assert "provenance" in res and res["provenance"]["git_sha"]
+    rows = res["scenarios"]
+    assert len(rows) >= 3
+    for name, row in rows.items():
+        for mode in MODES:
+            m = row[mode]
+            assert math.isfinite(m["makespan_s"]) and m["makespan_s"] > 0, \
+                (name, mode)
+            assert m["failed"] == [], (name, mode, m["failed"])
+        # static arm must have no controller; controlled arms must be clean
+        assert "controller" not in row["static"], name
+        for mode in ("guarded", "unguarded"):
+            c = row[mode]["controller"]
+            assert c["errors"] == 0 and not c["dead"], (name, mode, c)
+        assert row["deterministic"], f"{name}: non-deterministic replay"
+    # acceptance: the guarded controller beats the static plan on makespan
+    # in >= 2 of 3 drift scenarios, and beats replan-on-every-alert in
+    # >= 1 (the guardrails must visibly pay for themselves)
+    wins_static = sum(1 for r in rows.values() if r["guarded_beats_static"])
+    wins_unguarded = sum(1 for r in rows.values()
+                         if r["guarded_beats_unguarded"])
+    assert wins_static >= 2, \
+        f"guarded beats static only {wins_static}/{len(rows)}"
+    assert wins_unguarded >= 1, \
+        f"guarded never beats unguarded ({wins_unguarded}/{len(rows)})"
+
+
+def online_bench_artifact() -> dict:
+    """benchmarks/run.py entry: writes BENCH_online.json."""
+    res = run_online_bench()
+    check_result(res)
+    return res
+
+
+ALL = [online_bench_artifact]
+
+
+def main(argv=None) -> None:
+    _sys_path()
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="same matrix (already CI-sized), writes "
+                         "BENCH_online.smoke.json and asserts the emitted "
+                         "JSON round-trips")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        out = args.out or SMOKE_OUT
+        res = run_online_bench(out_path=out, seed=args.seed)
+        with open(out) as f:   # must round-trip as valid JSON
+            check_result(json.load(f))
+        print(f"online_bench --smoke PASS ({res['derived']}) wrote {out}")
+        return
+
+    res = run_online_bench(out_path=args.out or OUT, seed=args.seed)
+    check_result(res)
+    print(json.dumps({k: v for k, v in res.items() if k != "scenarios"},
+                     indent=1, default=float))
+    print(f"wrote {args.out or OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,8 @@ end-to-end request spans on the ``requests`` lane.
     PYTHONPATH=src python examples/trace_run.py --scenario serve_diurnal \
         --policy least_loaded --out diurnal.trace.json
     PYTHONPATH=src python examples/trace_run.py --scenario straggler_heavy
+    PYTHONPATH=src python examples/trace_run.py --scenario drift_gray_creep \
+        --mode guarded   # controller decisions land on the "controller" lane
 
 ``--check-determinism`` runs the scenario twice and asserts the two trace
 files are byte-identical — the guarantee CI's trace-smoke job pins.
@@ -74,16 +76,38 @@ def record_train(name: str, seed: int, max_events):
     return rec, f"makespan {res.makespan:.1f}s, {res.n_events} events"
 
 
+def record_drift(name: str, mode: str, seed: int, max_events):
+    from repro.sim import scenarios as sc
+    from repro.sim.evaluate import run_drift_scenario
+
+    scn = sc.get_drift_scenario(name)
+    rec = obs.Recorder(max_events=max_events)
+    with obs.recording(rec):
+        res, ctl = run_drift_scenario(scn, mode=mode, seed=seed, obs=rec)
+    if ctl is None:
+        extra = "controller off"
+    else:
+        s = ctl.summary()
+        extra = (f"{s['alerts']} alerts, {s['replans']} replans, "
+                 f"{s['rollbacks']} rollbacks, {s['suppressed']} suppressed, "
+                 f"{s['gate_rejects']} gate-rejected")
+    return rec, f"{mode}: makespan {res.makespan:.1f}s, {extra}"
+
+
 def run_once(args):
     from repro.sim import scenarios as sc
 
     if args.scenario in sc.SERVE_SCENARIOS:
         return record_serve(args.scenario, args.policy, args.seed,
                             args.time_scale, args.max_events)
+    if args.scenario in sc.DRIFT_SCENARIOS:
+        return record_drift(args.scenario, args.mode, args.seed,
+                            args.max_events)
     if args.scenario in sc.SCENARIOS:
         return record_train(args.scenario, args.seed, args.max_events)
     raise SystemExit(f"unknown scenario {args.scenario!r}; serve: "
-                     f"{sorted(sc.SERVE_SCENARIOS)}, training: "
+                     f"{sorted(sc.SERVE_SCENARIOS)}, drift: "
+                     f"{sorted(sc.DRIFT_SCENARIOS)}, training: "
                      f"{sorted(sc.SCENARIOS)}")
 
 
@@ -94,6 +118,9 @@ def main(argv=None):
     ap.add_argument("--policy", default="least_loaded",
                     help="routing policy for serve scenarios "
                          "(nearest | least_loaded | hulk)")
+    ap.add_argument("--mode", default="guarded",
+                    choices=("static", "guarded", "unguarded"),
+                    help="re-planning policy for drift_* scenarios")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="scale a serve scenario's horizon (0.1 = 10x "

@@ -22,7 +22,7 @@ groups when a task is left short — this makes the scheduler total instead of
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -181,6 +181,69 @@ def _repair(graph, tasks, groups, deferred, remaining):
             remaining.extend(i for i in got if i not in rem_set)
             still_deferred.append(name)
     return groups, still_deferred, remaining
+
+
+# ---------------------------------------------------------------------------
+# Replan-delta costing: what does it take to move from one assignment to
+# another? A mid-run re-plan is not free — every machine that *joins* a
+# task's group must pull that task's state before it can contribute. The
+# delta below is the pure set computation; the live controller prices each
+# move through the simulator's NetworkModel (which sees fault overlays).
+# ---------------------------------------------------------------------------
+def plan_delta(old_groups: dict[str, Sequence[int]],
+               new_groups: dict[str, Sequence[int]]) -> dict[str, dict]:
+    """Per-task membership delta between two assignments.
+
+    Returns ``{task: {"joined": [...], "left": [...], "kept": [...]}}`` for
+    every task whose group changed (tasks with identical membership are
+    omitted — a no-op replan has an empty delta)."""
+    delta: dict[str, dict] = {}
+    for name in sorted(set(old_groups) | set(new_groups)):
+        old = set(old_groups.get(name, ()))
+        new = set(new_groups.get(name, ()))
+        if old == new:
+            continue
+        delta[name] = {"joined": sorted(new - old), "left": sorted(old - new),
+                       "kept": sorted(old & new)}
+    return delta
+
+
+def migration_moves(old_groups: dict[str, Sequence[int]],
+                    new_groups: dict[str, Sequence[int]],
+                    tasks: Sequence[cm.ModelTask],
+                    strategies: Optional[dict[str, str]] = None
+                    ) -> list[tuple]:
+    """State transfers needed to realize ``new_groups`` from ``old_groups``:
+    one ``(task, src, dst, nbytes)`` per joining machine, pulling the task's
+    parameters from a retained old member. Sources are candidate lists —
+    every old member holds the state, so the caller picks the cheapest under
+    its network view.
+
+    ``strategies`` (task name -> parallelism strategy) refines the byte
+    count: a ``gpipe``/``tp`` joiner hosts one shard of the model, so it
+    pulls ``param_bytes / len(new_group)``; a ``dp`` joiner replicates and
+    pulls the full blob. Without it every move is priced at the full
+    ``param_bytes`` (the conservative historical costing).
+
+    A task with no surviving old member restarts from the checkpoint store
+    instead; that costs a restart (priced by the controller's margin), not a
+    peer transfer, so it contributes no move here."""
+    by_name = {t.name: t for t in tasks}
+    moves: list[tuple] = []
+    for name, d in plan_delta(old_groups, new_groups).items():
+        task = by_name.get(name)
+        if task is None or not d["joined"]:
+            continue
+        srcs = d["kept"] or d["left"]
+        if not srcs:
+            continue
+        nbytes = float(task.param_bytes)
+        strategy = (strategies or {}).get(name)
+        if strategy in ("gpipe", "tp"):
+            nbytes /= max(1, len(new_groups.get(name, ())))
+        for dst in d["joined"]:
+            moves.append((name, list(srcs), dst, nbytes))
+    return moves
 
 
 # ---------------------------------------------------------------------------

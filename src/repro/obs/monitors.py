@@ -41,6 +41,10 @@ from typing import Callable, Optional
 LATENCY_METRIC = "serve.latency_s"
 SLOWDOWN_PREFIX = "replica.slowdown.m"
 DROP_METRIC = "serve.dropped"
+# hosts emit one inc per machine that rejoins after a crash/flap; the monitor
+# drops that machine's EWMA state so a pre-crash excursion can't mask (or
+# fake) post-rejoin drift
+REJOIN_PREFIX = "machine.rejoin.m"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,7 +53,7 @@ class DriftConfig:
     window_s: float = 120.0
     min_samples: int = 5
     cooldown_s: float = 60.0
-    # rolling p95 over serve.latency_s in the window
+    # rolling p95 over latency_metric observations in the window
     rolling_p95_threshold_s: Optional[float] = None
     # per-machine EWMA of replica.slowdown.m<id> (1.0 = nominal speed)
     slowdown_threshold: Optional[float] = None
@@ -59,6 +63,9 @@ class DriftConfig:
     slo_s: Optional[float] = None
     slo_budget: float = 0.05
     burn_rate_threshold: Optional[float] = None
+    # which observe-metric feeds the p95/SLO windows: serve runs emit
+    # per-request serve.latency_s, training runs emit per-step sim.step_s
+    latency_metric: str = LATENCY_METRIC
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,7 +116,7 @@ class DriftMonitor:
     # -- stream handling -----------------------------------------------------
     def _on_metric(self, kind: str, name: str, value) -> None:
         cfg = self.config
-        if kind == "observe" and name == LATENCY_METRIC:
+        if kind == "observe" and name == cfg.latency_metric:
             t = self._now()
             v = float(value)
             self._lat.append((t, v))
@@ -120,11 +127,25 @@ class DriftMonitor:
         elif kind == "observe" and name.startswith(SLOWDOWN_PREFIX):
             mid = int(name[len(SLOWDOWN_PREFIX):])
             self._bump_ewma(mid, float(value))
+        elif kind == "inc" and name.startswith(REJOIN_PREFIX):
+            self.reset_machine(int(name[len(REJOIN_PREFIX):]))
         elif kind == "inc" and name == DROP_METRIC and cfg.slo_s is not None:
             t = self._now()
             for _ in range(int(value)):
                 self._slo.append((t, 1))   # a dropped request burns budget
             self._check_burn(t)
+
+    def reset_machine(self, machine: int) -> None:
+        """Forget a machine's EWMA slowdown state. Hosts announce rejoins
+        with an ``inc machine.rejoin.m<id>``; a machine that comes back after
+        a crash/flap is a fresh box, so its pre-crash EWMA must not carry
+        over — stale state would either mask real post-rejoin drift (until
+        the EWMA decays) or fake drift on a now-healthy machine. The
+        min_samples warm-up restarts too."""
+        mid = int(machine)
+        self._ewma.pop(mid, None)
+        self._ewma_n.pop(mid, None)
+        self._last_alert.pop(("slowdown", str(mid)), None)
 
     def _prune(self, dq: collections.deque, t: float) -> None:
         horizon = t - self.config.window_s
@@ -151,6 +172,16 @@ class DriftMonitor:
         rank = max(1, math.ceil(0.95 * len(vals)))
         return vals[rank - 1]
 
+    def p95_since(self, t0: float) -> tuple[float, int]:
+        """p95 (and sample count) over windowed latency observations at or
+        after ``t0`` — the controller's canary probation compares the
+        post-commit tail against the pre-commit baseline with this."""
+        vals = sorted(v for t, v in self._lat if t >= t0)
+        if not vals:
+            return 0.0, 0
+        rank = max(1, math.ceil(0.95 * len(vals)))
+        return vals[rank - 1], len(vals)
+
     def slowdown(self, machine: int) -> float:
         return self._ewma.get(int(machine), 1.0)
 
@@ -169,7 +200,7 @@ class DriftMonitor:
             return
         p95 = self.rolling_p95_s()
         if p95 > thr:
-            self._fire(t, "rolling_p95", LATENCY_METRIC, p95, thr)
+            self._fire(t, "rolling_p95", self.config.latency_metric, p95, thr)
 
     def _bump_ewma(self, mid: int, ratio: float) -> None:
         a = self.config.slowdown_alpha
@@ -194,7 +225,7 @@ class DriftMonitor:
             return
         rate = self.burn_rate()
         if rate > thr:
-            self._fire(t, "slo_burn", LATENCY_METRIC, rate, thr)
+            self._fire(t, "slo_burn", self.config.latency_metric, rate, thr)
 
     # -- reading -------------------------------------------------------------
     def summary(self) -> dict:

@@ -1,3 +1,5 @@
 from repro.runtime.elastic import ElasticRuntime, FailureEvent
+from repro.runtime.controller import ControllerConfig, ReplanController
 
-__all__ = ["ElasticRuntime", "FailureEvent"]
+__all__ = ["ElasticRuntime", "FailureEvent", "ControllerConfig",
+           "ReplanController"]

@@ -17,17 +17,19 @@ from repro.sim.engine import Simulator
 from repro.sim.evaluate import (FleetSimulation, SimResult, comparison_table,
                                 evaluate_all, evaluate_scenario,
                                 observed_telemetry, observed_telemetry_live,
-                                simulate_single)
+                                run_drift_scenario, simulate_single)
 from repro.sim.faults import (FaultPlan, GrayFailure, LinkDegradation,
                               MachineCrash, MachineFlap, RegionPartition,
                               RegionPreemption, compile_plan,
                               plan_from_fracs)
 from repro.sim.network import NetworkModel
-from repro.sim.scenarios import (SCENARIOS, SERVE_SCENARIOS, Scenario,
-                                 ServeScenario, get_scenario,
-                                 get_serve_scenario, register,
+from repro.sim.scenarios import (DRIFT_SCENARIOS, SCENARIOS, SERVE_SCENARIOS,
+                                 DriftScenario, Scenario, ServeScenario,
+                                 get_drift_scenario, get_scenario,
+                                 get_serve_scenario, register, register_drift,
                                  register_serve, temporary_registration,
-                                 unregister, unregister_serve)
+                                 unregister, unregister_drift,
+                                 unregister_serve)
 from repro.sim.workload import ServeExecutor
 
 __all__ = [
@@ -35,6 +37,8 @@ __all__ = [
     "Scenario", "SCENARIOS", "register", "get_scenario",
     "ServeScenario", "SERVE_SCENARIOS", "register_serve",
     "get_serve_scenario", "ServeExecutor",
+    "DriftScenario", "DRIFT_SCENARIOS", "register_drift",
+    "get_drift_scenario", "unregister_drift", "run_drift_scenario",
     "unregister", "unregister_serve", "temporary_registration",
     "FaultPlan", "MachineCrash", "RegionPreemption", "LinkDegradation",
     "RegionPartition", "GrayFailure", "MachineFlap",

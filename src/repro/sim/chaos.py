@@ -193,6 +193,136 @@ def fuzz_one(seed: int, check_planes: bool = True) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Controller invariants (online re-planning): the guarded live controller
+# must never cost correctness, only makespan. Invariants:
+#
+# 1. **determinism** — a controller-enabled run replays byte-identically
+#    (canonical fleet record + the controller's full decision log);
+# 2. **no commit over a propagating commit** — every committed replan saw
+#    ``migrations_in_flight == 0`` (the "migrating" suppression actually
+#    suppresses);
+# 3. **rollback exactness** — a forced-rollback drill (probation tuned to
+#    always regress) restores the exact last-good assignment, byte for byte;
+# 4. **controller-off identity** — ``controller=None`` produces the same
+#    canonical record as a host constructed without the argument at all, and
+#    emits zero controller metrics (the pre-controller trace is untouched).
+# ---------------------------------------------------------------------------
+def canonical_fleet(res, controller=None) -> str:
+    """Byte-comparable projection of a fleet run (+ controller decisions)."""
+    rows = {
+        "makespan": float(res.makespan),
+        "per_task": {n: {"step_times": [float(t) for t in d["step_times"]],
+                         "finish_s": float(d["finish_s"])
+                         if d["finish_s"] is not None else None,
+                         "failed": bool(d["failed"])}
+                     for n, d in sorted(res.per_task.items())},
+        "replans": [{"at_s": float(r["at_s"]), "reason": r["reason"]}
+                    for r in res.replans],
+    }
+    if controller is not None:
+        rows["log"] = json.loads(json.dumps(controller.summary()["log"],
+                                            default=float))
+    return json.dumps(rows, sort_keys=True)
+
+
+def _drift_run(name: str, mode: str, seed: int = 0, controller_cfg=None,
+               obs=None):
+    """One drift-scenario run; ``controller_cfg`` overrides the scenario's
+    guarded config (the rollback drill swaps in a hair-trigger probation)."""
+    import dataclasses
+
+    from repro.sim import scenarios as sc
+    from repro.sim.evaluate import run_drift_scenario
+    scn = sc.get_drift_scenario(name)
+    if controller_cfg is not None:
+        scn = dataclasses.replace(scn, controller=controller_cfg)
+    return run_drift_scenario(scn, mode=mode, seed=seed, obs=obs)
+
+
+def fuzz_controller(seed: int = 0, log=print) -> dict:
+    """Run the controller invariant suite over every registered drift
+    scenario; raises AssertionError on any violation."""
+    import dataclasses
+
+    from repro import obs as obs_mod
+    from repro.sim import scenarios as sc
+    from repro.sim.evaluate import FleetSimulation
+    cases = []
+    for name in sorted(sc.DRIFT_SCENARIOS):
+        for mode in ("guarded", "unguarded"):
+            res, ctl = _drift_run(name, mode, seed)
+            assert not ctl.dead and ctl.summary()["errors"] == 0, (name, mode)
+            # 2: a commit must never land while migrations are in flight
+            for e in ctl.log:
+                if e["action"] == "commit":
+                    assert e["migrating_at_commit"] == 0, (name, mode, e)
+            # 1: independent second run replays byte-identically
+            dump = canonical_fleet(res, ctl)
+            res2, ctl2 = _drift_run(name, mode, seed)
+            assert dump == canonical_fleet(res2, ctl2), \
+                f"{name}/{mode}: non-deterministic controller replay"
+            cases.append({"scenario": name, "mode": mode,
+                          "replans": ctl.summary()["replans"],
+                          "rollbacks": ctl.summary()["rollbacks"]})
+            log(f"controller {name}/{mode}: "
+                f"{ctl.summary()['replans']} replans, deterministic OK")
+
+        # 4: controller=None is byte-identical to a host built without the
+        # argument, and emits no controller/slowdown metrics
+        res_off, _ = _drift_run(name, "static", seed)
+        scn = sc.get_drift_scenario(name)
+        graph = scn.fleet(seed)
+        from repro.sim.evaluate import HulkPlacer, trained_gnn
+        from repro.sim.evaluate import observed_telemetry
+        params, cfg = trained_gnn(list(scn.tasks), seed=0,
+                                  label_mode=scn.label_mode,
+                                  jitter=scn.jitter, traffic=scn.traffic,
+                                  comm_model=scn.comm_model)
+        if scn.label_mode == "sim":
+            graph = graph.with_telemetry(observed_telemetry(
+                graph, jitter=scn.jitter, seed=seed,
+                comm_model=scn.comm_model))
+        rec = obs_mod.Recorder()
+        placer = HulkPlacer(list(scn.tasks), params, cfg,
+                            comm_model=scn.comm_model,
+                            sim_refine=(scn.label_mode == "sim"),
+                            jitter=scn.jitter, traffic=scn.traffic, seed=seed)
+        res_legacy = FleetSimulation(
+            graph, list(scn.tasks), placer, comm_model=scn.comm_model,
+            jitter=scn.jitter, traffic=scn.traffic,
+            fault_plan=scn.fault_plan, steps=scn.steps, seed=seed,
+            concurrent=True, obs=rec).run()
+        assert canonical_fleet(res_off) == canonical_fleet(res_legacy), \
+            f"{name}: controller=None differs from the pre-controller host"
+        counters = rec.metrics.snapshot()["counters"]
+        stray = [k for k in counters
+                 if k.startswith("controller.")
+                 or k.startswith("replica.slowdown.")]
+        assert not stray, f"{name}: controller-off run emitted {stray}"
+        log(f"controller {name}/static: identical to pre-controller host OK")
+
+    # 3: forced-rollback drill — probation that always regresses must
+    # restore the exact last-good assignment
+    base = sc.get_drift_scenario("drift_gray_creep").controller
+    drill = dataclasses.replace(base, probation_s=20.0,
+                                probation_regress=-0.95)
+    res, ctl = _drift_run("drift_gray_creep", "guarded", seed,
+                          controller_cfg=drill)
+    s = ctl.summary()
+    assert s["errors"] == 0, s["log"]
+    assert s["rollbacks"] >= 1, \
+        f"rollback drill produced no rollback: {s['log']}"
+    for e in ctl.log:
+        if e["action"] == "rollback":
+            assert e["restored"] == e["last_good"], e
+    cases.append({"scenario": "drift_gray_creep", "mode": "rollback_drill",
+                  "replans": s["replans"], "rollbacks": s["rollbacks"]})
+    log(f"controller rollback drill: {s['rollbacks']} rollback(s) restored "
+        f"last-good exactly OK")
+    return {"seed": seed, "violations": 0, "cases": cases}
+
+
 def fuzz(n_seeds: int = 25, base_seed: int = 0,
          check_planes: bool = True, log=print) -> dict:
     results = []
@@ -214,16 +344,25 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--base-seed", type=int, default=0)
     ap.add_argument("--skip-planes", action="store_true",
                     help="skip the fast-vs-reference plane equivalence runs")
+    ap.add_argument("--controller", action="store_true",
+                    help="also run the online re-planning controller "
+                         "invariant suite over the drift scenarios")
     ap.add_argument("--out", default=None,
                     help="write the JSON summary here")
     args = ap.parse_args(argv)
     summary = fuzz(args.seeds, base_seed=args.base_seed,
                    check_planes=not args.skip_planes,
                    log=lambda s: print(s, file=sys.stderr))
+    if args.controller:
+        summary["controller"] = fuzz_controller(
+            seed=args.base_seed, log=lambda s: print(s, file=sys.stderr))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(summary, f, indent=1, default=float)
-    print(f"chaos fuzz PASS: {args.seeds} seeds, 0 invariant violations")
+    extra = (f" + controller suite ({len(summary['controller']['cases'])} "
+             f"cases)" if args.controller else "")
+    print(f"chaos fuzz PASS: {args.seeds} seeds, 0 invariant "
+          f"violations{extra}")
 
 
 if __name__ == "__main__":

@@ -41,11 +41,12 @@ from repro.core import cost_model as cm
 from repro.core import placement as placement_mod
 from repro.core import train as gnn_train
 from repro.core.graph import ClusterGraph, NodeTelemetry
-from repro.runtime import ElasticRuntime, FailureEvent
+from repro.runtime import (ControllerConfig, ElasticRuntime, FailureEvent,
+                           ReplanController)
 from repro.sim import faults as faults_mod
 from repro.sim import scenarios as sc
 from repro.sim.compute import ComputeModel, JitterConfig
-from repro.sim.engine import Simulator
+from repro.sim.engine import Barrier, Simulator
 from repro.sim.network import NetworkModel
 from repro.sim.workload import analytic_step_time, run_step
 
@@ -231,6 +232,27 @@ class HulkPlacer:
         return self.rt.graph, self._placements(self.rt.graph,
                                                self.rt.assignment)
 
+    # -- online mode (runtime.controller) ------------------------------------
+    def propose(self, graph: ClusterGraph) -> assign_mod.Assignment:
+        """A fresh GNN assignment for ``graph`` (normally carrying live
+        telemetry and the network's effective latency), *not* committed —
+        the re-planning controller scores it against the current plan."""
+        return assign_mod.task_assignments(graph, self.tasks, self.params,
+                                           self.cfg)
+
+    def refine(self, graph: ClusterGraph,
+               assignment: assign_mod.Assignment) -> assign_mod.Assignment:
+        """Expose the sim-local-search polish to the online controller."""
+        return self._refined(graph, assignment)
+
+    def commit(self, assignment: assign_mod.Assignment, graph: ClusterGraph,
+               reason: str = "controller") -> dict[str, Placement]:
+        """Adopt a controller-chosen assignment mid-run through the same
+        epoch-guarded ``ElasticRuntime.commit_assignment`` path refinement
+        and fault recovery use; returns the runnable placements."""
+        self.rt.commit_assignment(assignment, graph=graph, reason=reason)
+        return self._placements(self.rt.graph, self.rt.assignment)
+
 
 # ---------------------------------------------------------------------------
 # The fleet simulation
@@ -272,7 +294,7 @@ class FleetSimulation:
                  fault_fracs: Sequence[float] = (),
                  kills_per_fault: int = 1, fault_plan=None,
                  steps: int = 3, seed: int = 0, concurrent: bool = True,
-                 net_solver: str = "fast", obs=None):
+                 net_solver: str = "fast", obs=None, controller=None):
         self.graph = graph
         self.tasks = list(tasks)
         self.placer = placer
@@ -291,8 +313,16 @@ class FleetSimulation:
         self.seed = seed
         self.concurrent = concurrent
 
+        # the online controller is driven by the metric stream, so a run
+        # with a controller needs an enabled recorder even when the caller
+        # didn't ask for one; controller=None keeps the historical obs
+        # behaviour bit-for-bit
+        self.controller = controller
+        if controller is not None and (obs is None or not obs.enabled):
+            obs = obs_mod.Recorder()
         self.obs = obs if obs is not None else obs_mod.NULL
         self.sim = Simulator(obs=self.obs)
+        self.migrations_in_flight = 0
         self.placements: dict[str, Placement] = {}
         self.runs = {t.name: _TaskRun(task=t) for t in self.tasks}
         self.replans: list[dict] = []
@@ -409,6 +439,19 @@ class FleetSimulation:
                 self.obs.metrics.inc("sim.steps_done")
                 self.obs.metrics.observe("sim.step_s",
                                          self.sim.now - t_start)
+                if self.controller is not None:
+                    # per-machine observed slowdown for the drift monitor,
+                    # keyed by *original* id (stable across compaction) —
+                    # only emitted when a controller is listening, so
+                    # controller=None traces stay bit-identical
+                    slow = self.compute.slow_factor * self.compute.gray
+                    cur2orig = {c: o for o, c in enumerate(self._orig2cur)
+                                if c >= 0}
+                    for i in pl.ids:
+                        o = cur2orig.get(int(i))
+                        if o is not None:
+                            self.obs.metrics.observe(
+                                f"replica.slowdown.m{o}", float(slow[i]))
             if run.steps_done >= self.steps:
                 self._task_over(name, failed=False)
             else:
@@ -516,6 +559,11 @@ class FleetSimulation:
                       for v in victims]
         self.sim.bump_epoch()
         self.net.reset()
+        # in-flight migration transfers died with the epoch; the controller's
+        # probation snapshot is stale (ids compact below)
+        self.migrations_in_flight = 0
+        if self.controller is not None:
+            self.controller.on_external_replan()
         try:
             self.graph, self.placements = self.placer.on_failure(
                 victims, at_step=max(r.steps_done for r in self.runs.values()))
@@ -548,6 +596,9 @@ class FleetSimulation:
             return
         self.sim.bump_epoch()
         self.net.reset()
+        self.migrations_in_flight = 0
+        if self.controller is not None:
+            self.controller.on_external_replan()
         joined = []
         for orig, machine in rejoin:
             try:
@@ -562,6 +613,11 @@ class FleetSimulation:
             self.obs.metrics.inc("faults.recoveries", len(joined))
             self.obs.trace.instant("faults", "rejoin", cat="fault",
                                    args={"n": len(joined)})
+            for orig in joined:
+                if orig >= 0:
+                    # rejoin marker: DriftMonitor drops the machine's stale
+                    # pre-crash EWMA slowdown state on this signal
+                    self.obs.metrics.inc(f"machine.rejoin.m{orig}")
         self._bytes_retired += self.net.bytes_moved
         self._build_models(self._estimate_horizon())
         self._restart_unfinished()
@@ -580,8 +636,82 @@ class FleetSimulation:
             for name in running:
                 self._start_step(name)
 
+    # -- online re-planning (runtime.controller) -----------------------------
+    def unfinished(self) -> list[str]:
+        return [n for n, r in self.runs.items()
+                if r.finish_time is None and not r.failed]
+
+    def commit_plan(self, assignment, graph, *,
+                    reason: str = "controller_replan") -> dict:
+        """Commit a controller-produced assignment mid-run through the exact
+        epoch-guarded sequence fault recovery uses (bump epoch -> reset net
+        -> commit through the placer's runtime -> rebuild models -> restart
+        interrupted steps), plus the one thing a voluntary re-plan adds:
+        the plan delta's **migration traffic**. Every machine joining a
+        group pulls the task's parameters from the cheapest retained member
+        over the *new* network before that task's step restarts (a Barrier
+        joins the pulls); tasks whose groups didn't change restart
+        immediately. ``migrations_in_flight`` counts outstanding pulls so
+        the controller can refuse to re-plan while a previous commit is
+        still propagating."""
+        live = set(self.unfinished())
+        old_groups = {name: sorted(pl.ids)
+                      for name, pl in self.placements.items() if name in live}
+        self.sim.bump_epoch()
+        self.net.reset()
+        self.migrations_in_flight = 0   # epoch bump killed any stragglers
+        self.placements = self.placer.commit(assignment, graph,
+                                             reason=reason)
+        self.graph = self.placer.rt.graph
+        new_groups = {name: sorted(pl.ids)
+                      for name, pl in self.placements.items() if name in live}
+        moves = assign_mod.migration_moves(
+            old_groups, new_groups, self.tasks,
+            strategies={name: pl.strategy
+                        for name, pl in self.placements.items()})
+        self.replans.append({"at_s": self.sim.now, "reason": reason,
+                             "moves": len(moves)})
+        self._bytes_retired += self.net.bytes_moved
+        self._build_models(self._estimate_horizon())
+
+        by_task: dict[str, list] = {}
+        for name, srcs, dst, nb in moves:
+            by_task.setdefault(name, []).append((srcs, dst, nb))
+        if self.concurrent:
+            names = self.unfinished()
+        else:
+            names = [n for n in self.unfinished() if n not in self._queue]
+        total_bytes = 0.0
+        for name in names:
+            mv = by_task.get(name)
+            if not mv:
+                self._start_step(name)
+                continue
+            barrier = Barrier(len(mv), lambda name=name:
+                              self._start_step(name))
+            self.migrations_in_flight += len(mv)
+
+            def arrived(b=barrier):
+                self.migrations_in_flight -= 1
+                b.arrive()
+
+            for srcs, dst, nb in mv:
+                src = min(srcs, key=lambda s:
+                          (self.net.estimate_transfer_s(s, dst, nb), s))
+                total_bytes += nb
+                self.net.transfer(self.sim, src, dst, nb, arrived)
+        if self.obs.enabled:
+            self.obs.metrics.inc("sim.controller_commits")
+            self.obs.trace.instant(
+                "controller", "plan_commit", cat="controller",
+                args={"reason": reason, "moves": len(moves),
+                      "bytes": float(total_bytes)})
+        return {"moves": len(moves), "bytes": float(total_bytes)}
+
     # -- entry point --------------------------------------------------------
     def run(self) -> SimResult:
+        if self.controller is not None:
+            self.controller.bind(self)
         self.placements = self.placer.place(self.graph)
         horizon = self._estimate_horizon()
         self._build_models(horizon)
@@ -811,6 +941,54 @@ def evaluate_all(seed: int = 0,
                  names: Optional[Sequence[str]] = None) -> dict[str, dict]:
     names = list(names) if names is not None else sorted(sc.SCENARIOS)
     return {n: evaluate_scenario(sc.get_scenario(n), seed=seed) for n in names}
+
+
+def run_drift_scenario(scenario: "sc.DriftScenario", mode: str = "guarded",
+                       seed: int = 0, obs=None):
+    """Run one drift scenario under a re-planning policy. Returns
+    ``(SimResult, controller)`` — controller is ``None`` in static mode.
+
+    Modes:
+
+    * ``"static"``    — no controller; the initial plan rides out the drift
+      (bit-identical to a pre-controller ``FleetSimulation`` run).
+    * ``"guarded"``   — the scenario's tuned ``ControllerConfig``: hysteresis,
+      cooldown, migration-cost gate, canary probation.
+    * ``"unguarded"`` — same drift thresholds, every guard disabled
+      (``ControllerConfig.unguarded``): re-plan on every alert.
+    """
+    if mode == "static":
+        controller = None
+    elif mode == "guarded":
+        controller = ReplanController(scenario.controller)
+    elif mode == "unguarded":
+        controller = ReplanController(
+            ControllerConfig.unguarded(scenario.controller.drift))
+    else:
+        raise ValueError(f"unknown drift mode {mode!r}; "
+                         "known: static/guarded/unguarded")
+    graph = scenario.fleet(seed)
+    tasks = list(scenario.tasks)
+    params, cfg = trained_gnn(tasks, seed=0, label_mode=scenario.label_mode,
+                              jitter=scenario.jitter,
+                              traffic=scenario.traffic,
+                              comm_model=scenario.comm_model)
+    if scenario.label_mode == "sim":
+        graph = graph.with_telemetry(observed_telemetry(
+            graph, jitter=scenario.jitter, seed=seed,
+            comm_model=scenario.comm_model))
+    placer = HulkPlacer(tasks, params, cfg, comm_model=scenario.comm_model,
+                        sim_refine=(scenario.label_mode == "sim"),
+                        jitter=scenario.jitter, traffic=scenario.traffic,
+                        seed=seed)
+    res = FleetSimulation(graph, tasks, placer,
+                          comm_model=scenario.comm_model,
+                          jitter=scenario.jitter, traffic=scenario.traffic,
+                          fault_plan=scenario.fault_plan,
+                          steps=scenario.steps, seed=seed,
+                          concurrent=True, obs=obs,
+                          controller=controller).run()
+    return res, controller
 
 
 def comparison_table(results: dict[str, dict]) -> str:

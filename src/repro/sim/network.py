@@ -54,6 +54,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import math
 from typing import Callable, Optional
 
 import numpy as np
@@ -204,6 +205,27 @@ class NetworkModel:
 
     def reachable(self, i: int, j: int) -> bool:
         return i == j or self.routed_ms[i, j] > 0
+
+    def effective_latency(self) -> np.ndarray:
+        """The graph's direct-link latency with live fault overlays applied
+        (tombstones cut out, link cuts zeroed, inflation multiplied in) —
+        what the re-planning controller hands the GNN/scorer so a rotted
+        link is visible to placement, without baking overlays into the
+        committed graph (re-applying them is ``_reapply_faults``'s job)."""
+        return self._masked_latency().copy()
+
+    def estimate_transfer_s(self, i: int, j: int, nbytes: float) -> float:
+        """Zero-contention routed transfer-time estimate under the *current*
+        topology: propagation latency plus bytes over end-to-end bandwidth —
+        the exact time a lone flow realizes (the calibration contract), with
+        active link-fault overlays and tombstones already folded into
+        ``routed_ms``/``e2e_bw``. The re-planning controller prices a plan
+        delta's migration traffic with this; ``inf`` means unreachable."""
+        if i == j or nbytes <= 0:
+            return 0.0
+        if self.routed_ms[i, j] <= 0:
+            return math.inf
+        return self.latency_s(i, j) + float(nbytes) / float(self.e2e_bw[i, j])
 
     def relay_hubs(self) -> np.ndarray:
         """(n,) float mask of nodes that forward traffic for other pairs —

@@ -23,7 +23,10 @@ import numpy as np
 from repro.core import cost_model as cm
 from repro.core.graph import (GPU_CATALOG, ClusterGraph, Machine, _COORDS,
                               _latency_matrix, paper_fig1_graph, random_fleet)
+from repro.obs.monitors import DriftConfig
+from repro.runtime.controller import ControllerConfig
 from repro.sim.compute import JitterConfig
+from repro.sim.faults import FaultPlan, GrayFailure, LinkDegradation
 
 # Scenario task set: one model big enough that its group must span several
 # machines (30B params => ~480 GB of optimizer state, more than any single
@@ -84,13 +87,16 @@ def get_scenario(name: str) -> Scenario:
 @contextlib.contextmanager
 def temporary_registration(*scenarios):
     """Register throwaway scenarios for the duration of a ``with`` block —
-    accepts any mix of ``Scenario`` and ``ServeScenario`` and always removes
-    them on exit, so a failing test can't poison the registries for the rest
-    of the session."""
+    accepts any mix of ``Scenario``, ``ServeScenario`` and ``DriftScenario``
+    and always removes them on exit, so a failing test can't poison the
+    registries for the rest of the session."""
     registered: list[tuple[dict, str]] = []
     try:
         for scn in scenarios:
-            if isinstance(scn, ServeScenario):
+            if isinstance(scn, DriftScenario):
+                register_drift(scn)
+                registered.append((DRIFT_SCENARIOS, scn.name))
+            elif isinstance(scn, ServeScenario):
                 register_serve(scn)
                 registered.append((SERVE_SCENARIOS, scn.name))
             elif isinstance(scn, Scenario):
@@ -370,3 +376,155 @@ register_serve(ServeScenario(
     slo_s=15.0,
     autoscale=_serve_autoscale(),
     fault_fracs=(0.4,)))
+
+
+# ---------------------------------------------------------------------------
+# Drift scenarios (PR 9): training runs whose fault schedule makes the
+# *initial* plan stale mid-run, paired with the guarded-controller config
+# that is supposed to catch it. Kept in a third registry — drift runs go
+# through ``sim.evaluate.run_drift_scenario`` which wires a
+# ``runtime.controller.ReplanController`` into the fleet host.
+#
+# Fleets here are FIXED machine lists, not ``random_fleet``: the monitor
+# thresholds below (absolute rolling-p95 seconds, EWMA slowdown ratios)
+# were calibrated against these exact step times and would be meaningless
+# on a randomly re-drawn fleet.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DriftScenario:
+    name: str
+    description: str
+    fleet: Callable[[int], ClusterGraph]
+    controller: ControllerConfig
+    tasks: tuple[cm.ModelTask, ...] = SIM_TASKS
+    comm_model: str = "alphabeta"
+    jitter: JitterConfig = JitterConfig()
+    fault_plan: Optional[object] = None      # sim.faults.FaultPlan
+    traffic: Optional[TrafficBuilder] = None
+    steps: int = 8
+    # which GNN scores candidate plans online: "sim" = telemetry-aware v2
+    # labels (sees live slowdowns), "analytic" = v1 (cheap; the controller's
+    # greedy polish supplies the drift-awareness)
+    label_mode: str = "analytic"
+
+
+DRIFT_SCENARIOS: dict[str, DriftScenario] = {}
+
+
+def register_drift(scenario: DriftScenario) -> DriftScenario:
+    if scenario.name in DRIFT_SCENARIOS:
+        raise ValueError(f"drift scenario {scenario.name!r} already "
+                         "registered")
+    DRIFT_SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def unregister_drift(name: str) -> None:
+    """Remove a drift scenario (test isolation; unknown names are a no-op
+    so teardown never fails)."""
+    DRIFT_SCENARIOS.pop(name, None)
+
+
+def get_drift_scenario(name: str) -> DriftScenario:
+    try:
+        return DRIFT_SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown drift scenario {name!r}; "
+                       f"known: {sorted(DRIFT_SCENARIOS)}") from None
+
+
+def drift_lan_fleet(seed: int = 0, n: int = 8) -> ClusterGraph:
+    """n identical 8xV100 boxes (256 GB each) on one LAN: GPT-30B's group
+    must span two machines and leaves the rest idle — exactly the spare
+    capacity a mid-run re-plan needs to evict a graying member onto."""
+    rng = np.random.default_rng(seed)
+    machines = [Machine("California", "V100", 8) for _ in range(n)]
+    return ClusterGraph(machines, _latency_matrix(machines, rng))
+
+
+def drift_wan_fleet(seed: int = 0) -> ClusterGraph:
+    """Four EU regions x two 8xA5000 boxes (192 GB each): GPT-30B needs
+    three machines, so its group is forced across a region boundary and a
+    degrading inter-region link genuinely rots the plan; healthy region
+    pairs remain as re-plan targets."""
+    rng = np.random.default_rng(seed)
+    machines = [Machine(region, "A5000", 8)
+                for region in ("Paris", "Berlin", "London", "Rome")
+                for _ in range(2)]
+    return ClusterGraph(machines, _latency_matrix(machines, rng))
+
+
+# Step observations are sparse in training runs (one sim.step_s per task
+# step), so drift monitors run with a short warm-up; windows/cooldowns are
+# in sim seconds and sized to the step times of the fixed fleets above.
+_GRAY_DRIFT = DriftConfig(window_s=1e9, min_samples=2, cooldown_s=60.0,
+                          slowdown_threshold=1.8, slowdown_alpha=0.5,
+                          latency_metric="sim.step_s")
+_ROT_DRIFT = DriftConfig(window_s=240.0, min_samples=2, cooldown_s=25.0,
+                         rolling_p95_threshold_s=14.0,
+                         latency_metric="sim.step_s")
+_BURST_DRIFT = DriftConfig(window_s=1e9, min_samples=2, cooldown_s=30.0,
+                           slowdown_threshold=1.6, slowdown_alpha=0.6,
+                           latency_metric="sim.step_s")
+
+register_drift(DriftScenario(
+    name="drift_gray_creep",
+    description="Two of GPT-30B's V100 hosts gray out mid-run, creeping to "
+                "6x over a ramp and never recovering; the guarded "
+                "controller evicts them onto idle spares, static rides the "
+                "sick boxes to the end.",
+    fleet=drift_lan_fleet,
+    # machines 1 and 2 are GPT-30B pipeline stages under the seed-0 sim-GNN
+    # placement (GPT-2 rides machine 0 and finishes before the gray lands);
+    # targeting two live stages makes both emit slowdown EWMA excursions,
+    # which is what satisfies hysteresis=2
+    fault_plan=FaultPlan((
+        GrayFailure(at=0.20, machines=(1, 2), slowdown=6.0,
+                    ramp=0.20, ramp_steps=4),)),
+    controller=ControllerConfig(drift=_GRAY_DRIFT, hysteresis=2,
+                                hysteresis_window_s=1e9, cooldown_s=120.0,
+                                margin=0.02, probation_s=None),
+    label_mode="sim"))
+
+register_drift(DriftScenario(
+    name="drift_link_rot",
+    description="The inter-region link under GPT-30B's three-machine group "
+                "degrades (6x latency, 15% bandwidth) for most of the run; "
+                "re-planning regroups onto a healthy region pair.",
+    fleet=drift_wan_fleet,
+    # the seed-0 analytic-GNN placement pipelines GPT-30B across Paris
+    # (machines 0, 1) + London (machine 4): rot that exact region pair.
+    # lat_factor=30 pushes the ~10 ms link past the analytic comm model's
+    # 120/250 ms class bounds, so the controller's scorer sees the capacity
+    # collapse too (bw overlays themselves are invisible to the effective
+    # latency view). Fault times are fractions of the *healthy* horizon
+    # estimate, but rotted steps run ~10x long — duration=3.5 keeps the rot
+    # up past the stretched end of a static run, so riding it out really
+    # means riding it out
+    fault_plan=FaultPlan((
+        LinkDegradation(at=0.15, duration=3.5, regions=("Paris", "London"),
+                        lat_factor=30.0, bw_factor=0.03),)),
+    controller=ControllerConfig(drift=_ROT_DRIFT, hysteresis=2,
+                                hysteresis_window_s=1e9, cooldown_s=120.0,
+                                margin=0.02, probation_s=None),
+    steps=16,
+    label_mode="analytic"))
+
+register_drift(DriftScenario(
+    name="drift_flap_diurnal",
+    description="Diurnal background traffic plus two short gray bursts that "
+                "recover on their own: the alert storm where replanning on "
+                "every alert pays migration cost for drift that is already "
+                "gone — the guarded gate suppresses, unguarded thrashes.",
+    fleet=drift_wan_fleet,
+    traffic=diurnal_traffic(),
+    # bursts land on live GPT-30B members (0, 1, 4 at seed 0) so they alert,
+    # but recover within about one step — acting on them is pure loss
+    fault_plan=FaultPlan((
+        GrayFailure(at=0.30, machines=(1, 4), slowdown=4.0, duration=0.10),
+        GrayFailure(at=0.60, machines=(0, 4), slowdown=4.0, duration=0.10),)),
+    controller=ControllerConfig(drift=_BURST_DRIFT, hysteresis=3,
+                                hysteresis_window_s=150.0, cooldown_s=240.0,
+                                margin=0.10, probation_s=120.0,
+                                probation_regress=0.10),
+    label_mode="analytic"))

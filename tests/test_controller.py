@@ -1,0 +1,286 @@
+"""runtime.controller: the guarded online re-planning loop.
+
+Two layers of coverage:
+
+* **Envelope unit tests** drive ``ReplanController`` against a stub host on
+  a hand-cranked clock — hysteresis accumulation, window expiry, cooldown /
+  probation / in-flight-migration suppression, and fail-open degradation
+  are pure decision logic and need no fleet run.
+* **Closed-loop tests** run the registered ``DRIFT_SCENARIOS`` end to end:
+  the migration-priced gate rejecting a net-negative replan leaves the run
+  bit-identical to ``controller=None``, the canary drill restores the exact
+  last-good assignment, an injected exception degrades to the static plan,
+  and the headline claim — guarded beats static under gray creep — holds.
+
+Runs are deterministic (same-seed replay is byte-identical), so every
+closed-loop assertion is exact, not statistical.
+"""
+import dataclasses
+import functools
+import math
+
+import pytest
+
+from repro.obs import NULL
+from repro.obs.monitors import Alert, DriftConfig
+from repro.runtime.controller import ControllerConfig, ReplanController
+from repro.sim import scenarios as sc
+from repro.sim.chaos import canonical_fleet
+from repro.sim.evaluate import run_drift_scenario
+
+DRIFT = DriftConfig(min_samples=2, cooldown_s=0.0, slowdown_threshold=2.0,
+                    latency_metric="sim.step_s")
+
+
+def _alert(t: float = 0.0) -> Alert:
+    return Alert(t=t, kind="slowdown", key="1", value=3.0, threshold=2.0)
+
+
+class _StubSim:
+    def __init__(self):
+        self.now = 0.0
+        self.scheduled = []
+
+    def schedule(self, delay, fn, *args, pin_epoch=True):
+        self.scheduled.append((self.now + delay, fn, args, pin_epoch))
+
+
+class _StubHost:
+    """Just enough host for the decision path up to (but not into)
+    ``_replan``: a clock, a scheduler, and the in-flight-migration gauge."""
+
+    def __init__(self):
+        self.sim = _StubSim()
+        self.obs = NULL
+        self.migrations_in_flight = 0
+
+    def unfinished(self):
+        return ["gpt"]
+
+
+def _bound(cfg: ControllerConfig):
+    ctl = ReplanController(cfg)
+    host = _StubHost()
+    ctl.bind(host)          # NULL recorder: monitor attach is a no-op
+    return ctl, host
+
+
+# -- envelope unit tests ------------------------------------------------------
+
+def test_hysteresis_accumulates_before_scheduling():
+    ctl, host = _bound(ControllerConfig(drift=DRIFT, hysteresis=3,
+                                        hysteresis_window_s=100.0))
+    ctl._on_alert(_alert())
+    ctl._on_alert(_alert())
+    assert host.sim.scheduled == []          # 2 of 3: integrate, don't act
+    ctl._on_alert(_alert())
+    assert len(host.sim.scheduled) == 1
+    _, fn, _, pin_epoch = host.sim.scheduled[0]
+    assert fn == ctl._consider and pin_epoch is False
+    # a fourth alert while a decision is pending does not double-schedule
+    ctl._on_alert(_alert())
+    assert len(host.sim.scheduled) == 1
+
+
+def test_hysteresis_window_expires_old_alerts():
+    ctl, host = _bound(ControllerConfig(drift=DRIFT, hysteresis=2,
+                                        hysteresis_window_s=10.0))
+    ctl._on_alert(_alert())
+    host.sim.now = 50.0                      # first alert now out of window
+    ctl._on_alert(_alert(50.0))
+    assert host.sim.scheduled == []
+    ctl._on_alert(_alert(50.0))              # two inside the window: act
+    assert len(host.sim.scheduled) == 1
+
+
+def test_cooldown_suppresses_then_releases():
+    ctl, host = _bound(ControllerConfig(drift=DRIFT, hysteresis=1,
+                                        cooldown_s=100.0))
+    calls = []
+    ctl._replan = lambda now: calls.append(now)
+    ctl._last_action_t = 0.0
+    host.sim.now = 10.0
+    ctl._on_alert(_alert(10.0))
+    ctl._consider()
+    assert calls == []
+    assert ctl.log[-1] == {"t": 10.0, "action": "suppressed",
+                           "why": "cooldown"}
+    host.sim.now = 200.0                     # cooldown elapsed
+    ctl._on_alert(_alert(200.0))
+    ctl._consider()
+    assert calls == [200.0]
+
+
+def test_inflight_migration_suppresses():
+    ctl, host = _bound(ControllerConfig(drift=DRIFT, hysteresis=1,
+                                        cooldown_s=0.0))
+    ctl._replan = lambda now: pytest.fail("must not replan while migrating")
+    host.migrations_in_flight = 2
+    ctl._on_alert(_alert())
+    ctl._consider()
+    assert ctl.log[-1]["why"] == "migrating"
+
+
+def test_probation_window_suppresses():
+    ctl, host = _bound(ControllerConfig(drift=DRIFT, hysteresis=1,
+                                        cooldown_s=0.0))
+    ctl._replan = lambda now: pytest.fail("must not replan on probation")
+    ctl._probation = {"until": math.inf, "t_commit": 0.0, "pre_p95": 1.0,
+                      "graph": None, "assignment": None, "seq": 1}
+    ctl._on_alert(_alert())
+    ctl._consider()
+    assert ctl.log[-1]["why"] == "probation"
+
+
+def test_fail_open_marks_dead_and_ignores_later_alerts():
+    ctl, host = _bound(ControllerConfig(drift=DRIFT, hysteresis=1,
+                                        cooldown_s=0.0, fail_open=True))
+
+    def boom(now):
+        raise RuntimeError("synthetic controller bug")
+
+    ctl._replan = boom
+    ctl._on_alert(_alert())
+    ctl._consider()                          # swallowed: run must continue
+    assert ctl.dead
+    assert ctl.summary()["errors"] == 1
+    assert "synthetic controller bug" in ctl.log[-1]["error"]
+    n = len(host.sim.scheduled)
+    ctl._on_alert(_alert())                  # dead controller: inert
+    assert len(host.sim.scheduled) == n
+
+
+def test_fail_open_false_propagates():
+    ctl, host = _bound(ControllerConfig(drift=DRIFT, hysteresis=1,
+                                        cooldown_s=0.0, fail_open=False))
+
+    def boom(now):
+        raise RuntimeError("boom")
+
+    ctl._replan = boom
+    ctl._on_alert(_alert())
+    with pytest.raises(RuntimeError, match="boom"):
+        ctl._consider()
+
+
+def test_external_replan_resets_probation_and_cooldown():
+    ctl, host = _bound(ControllerConfig(drift=DRIFT, hysteresis=1,
+                                        cooldown_s=50.0))
+    ctl._probation = {"until": math.inf, "seq": 1, "t_commit": 0.0,
+                      "pre_p95": 1.0, "graph": None, "assignment": None}
+    host.sim.now = 30.0
+    ctl.on_external_replan()
+    assert ctl._probation is None
+    assert ctl._last_action_t == 30.0        # cooldown restarts at the crash
+
+
+def test_unguarded_config_disables_every_guard():
+    cfg = ControllerConfig.unguarded(DRIFT)
+    assert cfg.hysteresis == 1 and cfg.cooldown_s == 0.0
+    assert cfg.margin is None and cfg.probation_s is None
+    assert cfg.polish == "none" and cfg.drift is DRIFT
+
+
+# -- closed-loop tests over the drift registry --------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _run(name: str, mode: str):
+    return run_drift_scenario(sc.get_drift_scenario(name), mode=mode, seed=0)
+
+
+def test_gate_rejects_net_negative_replan():
+    # a margin no real gain can clear: every alert reaches the gate and is
+    # rejected, so the guarded run must be bit-identical to controller=None
+    scn = sc.get_drift_scenario("drift_link_rot")
+    timid = dataclasses.replace(scn.controller, margin=10.0)
+    res, ctl = run_drift_scenario(dataclasses.replace(scn, controller=timid),
+                                  mode="guarded", seed=0)
+    s = ctl.summary()
+    assert s["gate_rejects"] >= 1 and s["replans"] == 0, s
+    for e in ctl.log:
+        if e["action"] == "gate_reject":
+            assert not e["gain_s"] > e["floor_s"]
+    res_off, _ = _run("drift_link_rot", "static")
+    assert canonical_fleet(res) == canonical_fleet(res_off)
+
+
+def test_canary_probation_triggers_exact_rollback():
+    scn = sc.get_drift_scenario("drift_gray_creep")
+    drill = dataclasses.replace(scn.controller, probation_s=20.0,
+                                probation_regress=-0.95)
+    res, ctl = run_drift_scenario(dataclasses.replace(scn, controller=drill),
+                                  mode="guarded", seed=0)
+    s = ctl.summary()
+    assert s["errors"] == 0 and s["rollbacks"] >= 1, s
+    rollbacks = [e for e in ctl.log if e["action"] == "rollback"]
+    for e in rollbacks:
+        assert e["restored"] == e["last_good"]
+    # the rollback went through the normal epoch-guarded commit path
+    assert any(r["reason"] == "controller_rollback" for r in res.replans)
+
+
+def test_injected_exception_degrades_to_static(monkeypatch):
+    def boom(self, now):
+        raise RuntimeError("injected")
+
+    monkeypatch.setattr(ReplanController, "_replan", boom)
+    res, ctl = run_drift_scenario(sc.get_drift_scenario("drift_gray_creep"),
+                                  mode="guarded", seed=0)
+    assert ctl.dead and ctl.summary()["errors"] == 1
+    res_off, _ = _run("drift_gray_creep", "static")
+    # the run completed on its t=0 plan: same makespan as controller=None
+    assert res.makespan == res_off.makespan
+    assert all(not d["failed"] for d in res.per_task.values())
+
+
+def test_controller_none_is_deterministic_and_commit_free():
+    res, ctl = _run("drift_gray_creep", "static")
+    assert ctl is None and res.replans == []
+    res2, _ = run_drift_scenario(sc.get_drift_scenario("drift_gray_creep"),
+                                 mode="static", seed=0)
+    assert canonical_fleet(res) == canonical_fleet(res2)
+
+
+def test_guarded_replay_is_byte_identical():
+    res, ctl = _run("drift_gray_creep", "guarded")
+    res2, ctl2 = run_drift_scenario(sc.get_drift_scenario("drift_gray_creep"),
+                                    mode="guarded", seed=0)
+    assert canonical_fleet(res, ctl) == canonical_fleet(res2, ctl2)
+
+
+def test_guarded_beats_static_under_gray_creep():
+    res_g, ctl = _run("drift_gray_creep", "guarded")
+    res_s, _ = _run("drift_gray_creep", "static")
+    assert ctl.summary()["replans"] >= 1
+    assert res_g.makespan < res_s.makespan
+    assert all(not d["failed"] for d in res_g.per_task.values())
+
+
+def test_run_drift_scenario_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="mode"):
+        run_drift_scenario(sc.get_drift_scenario("drift_gray_creep"),
+                           mode="yolo", seed=0)
+
+
+# -- registry -----------------------------------------------------------------
+
+def test_drift_registry_contents():
+    assert {"drift_gray_creep", "drift_link_rot",
+            "drift_flap_diurnal"} <= set(sc.DRIFT_SCENARIOS)
+    for name in sc.DRIFT_SCENARIOS:
+        scn = sc.get_drift_scenario(name)
+        assert scn.name == name
+        assert isinstance(scn.controller, ControllerConfig)
+        assert scn.controller.drift.latency_metric == "sim.step_s"
+
+
+def test_drift_registry_errors_and_temporary_registration():
+    with pytest.raises(KeyError, match="unknown drift scenario"):
+        sc.get_drift_scenario("nope")
+    base = sc.get_drift_scenario("drift_gray_creep")
+    clone = dataclasses.replace(base, name="drift_tmp_test")
+    with sc.temporary_registration(clone):
+        assert sc.get_drift_scenario("drift_tmp_test") is clone
+        with pytest.raises(ValueError, match="already"):
+            sc.register_drift(clone)
+    assert "drift_tmp_test" not in sc.DRIFT_SCENARIOS

@@ -173,3 +173,29 @@ def test_slowdown_ewma_unit():
     assert [a.kind for a in mon.alerts] == ["slowdown"]
     assert mon.alerts[0].key == "3"
     assert mon.slowdown(99) == 1.0                    # unseen machine: nominal
+
+
+def test_rejoin_resets_slowdown_ewma():
+    # a machine that rejoins after a crash/flap is a fresh box: its
+    # pre-crash EWMA, warm-up count, and alert cooldown must all reset
+    rec = obs.Recorder()
+    rec.bind_clock(lambda: 1.0)
+    mon = DriftMonitor(DriftConfig(min_samples=2, cooldown_s=1e9,
+                                   slowdown_threshold=2.0,
+                                   slowdown_alpha=0.5)).attach(rec)
+    rec.metrics.observe("replica.slowdown.m3", 5.0)
+    rec.metrics.observe("replica.slowdown.m3", 5.0)
+    assert mon.slowdown(3) == 5.0 and len(mon.alerts) == 1
+    rec.metrics.inc("machine.rejoin.m3")
+    assert mon.slowdown(3) == 1.0                     # state forgotten
+    # warm-up restarts: one post-rejoin sample may not alert on its own
+    rec.metrics.observe("replica.slowdown.m3", 5.0)
+    assert len(mon.alerts) == 1
+    # cooldown key was dropped too: without the reset the 1e9s per-signal
+    # cooldown would swallow this alert (same clock instant as the first)
+    rec.metrics.observe("replica.slowdown.m3", 5.0)
+    assert len(mon.alerts) == 2
+    assert mon.slowdown(3) == 5.0
+    # a rejoin for an unseen machine is harmless
+    rec.metrics.inc("machine.rejoin.m7")
+    assert mon.slowdown(7) == 1.0
