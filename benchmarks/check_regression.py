@@ -103,11 +103,34 @@ GATES = {
         Gate("scenarios.*.guarded.step_p95_s", "lower", rel_tol=0.10,
              abs_tol=0.5),
     ],
+    # multi-tenant colocation: the contention-aware hulk arm carries the
+    # benchmark's value proposition, so its latency/goodput/SLO cells are
+    # gated like the serve smoke; baselines are load-blind by construction
+    # (their p95 can sit in queueing blow-up territory), so only their
+    # goodput is gated — a change that quietly improves the baselines past
+    # hulk still fails via mix_bench's own hulk_beats assertion. Training
+    # makespans are pure sim time and replay deterministically.
+    "mix": [
+        Gate("scenarios.*.hulk.p95_s", "lower", rel_tol=0.15, abs_tol=0.05),
+        Gate("scenarios.*.hulk.goodput_rps", "higher", rel_tol=0.10,
+             abs_tol=0.01),
+        Gate("scenarios.*.hulk.slo_violation_rate", "lower", rel_tol=0.0,
+             abs_tol=0.05),
+        Gate("scenarios.*.nearest.goodput_rps", "higher", rel_tol=0.10,
+             abs_tol=0.01),
+        Gate("scenarios.*.least_loaded.goodput_rps", "higher", rel_tol=0.10,
+             abs_tol=0.01),
+        Gate("scenarios.*.hulk.train_makespan_s", "lower", rel_tol=0.05,
+             abs_tol=0.5),
+        Gate("scenarios.*.least_loaded.train_makespan_s", "lower",
+             rel_tol=0.05, abs_tol=0.5),
+    ],
 }
 
 BASELINES = {
     "serve": os.path.join(HERE, "BENCH_serve.smoke.json"),
     "online": os.path.join(HERE, "BENCH_online.smoke.json"),
+    "mix": os.path.join(HERE, "BENCH_mix.smoke.json"),
 }
 
 
@@ -207,6 +230,11 @@ def run_fresh_smoke(artifact: str, out_path: str, seed: int = 0) -> dict:
         sys.path.insert(0, HERE)
         import online_bench
         return online_bench.run_online_bench(out_path=out_path, seed=seed)
+    if artifact == "mix":
+        sys.path.insert(0, HERE)
+        import mix_bench
+        return mix_bench.run_mix_bench(time_scale=0.4, out_path=out_path,
+                                       seed=seed)
     raise GateError(f"no fresh-run recipe for artifact {artifact!r}")
 
 

@@ -1,0 +1,195 @@
+"""Multi-tenant colocation benchmark: serve routing policies on a fleet
+shared with a live training tenant.
+
+Each registered colocated mix (``repro.sim.COLOCATED_SCENARIOS``) runs the
+training fleet and the serving fleet on ONE contended
+``Simulator``/``NetworkModel``/``ComputeModel`` via ``run_colocated``, under
+three serve routing policies: nearest-healthy, weighted-least-loaded, and
+Hulk-GNN-scored. Only the hulk arm sees the training tenant's capacity claim
+(``external_load``) — the baselines are load-blind, so the benchmark
+measures what contention-awareness is worth.
+
+Every arm is run TWICE and the two ``canonical_colocated`` digests must be
+byte-identical (per-arm double-run determinism), then checked against the
+colocated invariant suite (exactly-once serving, all training steps
+completed). Written to benchmarks/BENCH_mix.json.
+
+``python -m benchmarks.mix_bench --smoke`` runs a time-scaled version and
+asserts the emitted JSON round-trips (the CI job), writing
+BENCH_mix.smoke.json.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import platform
+import sys
+import time
+
+
+def _sys_path():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+OUT = os.path.join(os.path.dirname(__file__), "BENCH_mix.json")
+SMOKE_OUT = os.path.join(os.path.dirname(__file__), "BENCH_mix.smoke.json")
+POLICIES = ("nearest", "least_loaded", "hulk")
+
+
+def _scaled(scn, time_scale: float):
+    """A time-compressed copy of a colocated scenario (same request rates =>
+    same queueing/contention regime, shorter trace)."""
+    if time_scale >= 1.0:
+        return scn
+    orig_traffic = scn.traffic
+
+    def traffic(graph):
+        cfg = orig_traffic(graph)
+        h = cfg.horizon_s * time_scale
+        window = cfg.burst_window
+        if window is not None:
+            window = (window[0] * time_scale, window[1] * time_scale)
+        return dataclasses.replace(cfg, horizon_s=h, burst_window=window)
+    return dataclasses.replace(scn, traffic=traffic)
+
+
+def _arm(scn, policy: str, seed: int) -> dict:
+    """One scenario x policy cell: run twice, assert the canonical digests
+    match, check the invariant suite, return the metrics row."""
+    from repro.sim import (canonical_colocated, check_colocated_invariants,
+                           run_colocated)
+
+    t0 = time.time()
+    r = run_colocated(scn, policy, seed=seed)
+    again = run_colocated(scn, policy, seed=seed)
+    assert canonical_colocated(r) == canonical_colocated(again), \
+        (scn.name, policy, "colocated run did not replay byte-identically")
+    check_colocated_invariants(r, scn)
+    row = r["serve"].as_dict()
+    row.update({
+        "train_makespan_s": float(r["train"].makespan),
+        "train_hosts": r["train_hosts"],
+        "serve_hosts": r["serve_hosts"],
+        "overlap": r["overlap"],
+        "wall_s": time.time() - t0,
+        "deterministic": True,
+    })
+    return row
+
+
+def scenario_sweep(time_scale: float = 1.0, seed: int = 0) -> dict:
+    from repro.serve.evaluate import _beats
+    from repro.sim import COLOCATED_SCENARIOS, get_colocated_scenario
+
+    results = {}
+    for name in sorted(COLOCATED_SCENARIOS):
+        scn = _scaled(get_colocated_scenario(name), time_scale)
+        row: dict = {"scenario": name, "slo_s": scn.slo_s}
+        for policy in POLICIES:
+            row[policy] = _arm(scn, policy, seed)
+            print(f"mix_bench {name}/{policy}: "
+                  f"p95={row[policy]['p95_s']:.3g}s "
+                  f"goodput={row[policy]['goodput_rps']:.3g}rps "
+                  f"viol={row[policy]['slo_violation_rate']:.3g} "
+                  f"overlap={row[policy]['overlap']}", file=sys.stderr)
+        row["hulk_beats"] = {
+            "nearest": _beats(row["hulk"], row["nearest"]),
+            "least_loaded": _beats(row["hulk"], row["least_loaded"]),
+        }
+        results[name] = row
+    return results
+
+
+def run_mix_bench(time_scale: float = 1.0, out_path: str = OUT,
+                  seed: int = 0) -> dict:
+    import jax
+
+    res = {
+        "artifact": "mix_bench",
+        "machine": {"platform": platform.platform(),
+                    "backend": jax.default_backend(),
+                    "jax": jax.__version__},
+        "config": {"time_scale": time_scale, "seed": seed,
+                   "policies": list(POLICIES)},
+        "scenarios": scenario_sweep(time_scale, seed=seed),
+    }
+    rows = res["scenarios"].values()
+    wins_near = sum(1 for r in rows if r["hulk_beats"]["nearest"])
+    wins_ll = sum(1 for r in rows if r["hulk_beats"]["least_loaded"])
+    n = len(res["scenarios"])
+    res["derived"] = (f"hulk_beats nearest={wins_near}/{n} "
+                      f"least_loaded={wins_ll}/{n}")
+    from benchmarks._provenance import stamp
+    stamp(res, seed=seed, solver_mode="fast")
+    with open(out_path, "w") as f:
+        json.dump(res, f, indent=1, default=float)
+    return res
+
+
+def check_result(res: dict) -> None:
+    """Schema + acceptance assertions the CI smoke job relies on."""
+    assert res["artifact"] == "mix_bench"
+    scenarios = res["scenarios"]
+    assert {"colo_wan_steady", "colo_burst_contend",
+            "colo_hetero_lan"} <= set(scenarios)
+    for name, row in scenarios.items():
+        for policy in POLICIES:
+            m = row[policy]
+            for field in ("p50_s", "p95_s", "goodput_rps",
+                          "slo_violation_rate", "throughput_tps",
+                          "train_makespan_s"):
+                assert isinstance(m[field], (int, float)) \
+                    and not math.isnan(m[field]), (name, policy, field)
+            assert 0.0 <= m["slo_violation_rate"] <= 1.0
+            assert m["n_completed"] > 0, (name, policy)
+            assert m["train_makespan_s"] > 0.0, (name, policy)
+            assert m["deterministic"] is True, (name, policy)
+    # acceptance: contention-aware hulk placement beats each load-blind
+    # baseline on at least 2 of the 3 colocated mixes
+    for base in ("nearest", "least_loaded"):
+        wins = sum(1 for r in scenarios.values() if r["hulk_beats"][base])
+        assert wins >= 2, (base, wins, {k: v["hulk_beats"]
+                                        for k, v in scenarios.items()})
+
+
+def mix_bench_artifact() -> dict:
+    """benchmarks/run.py entry: full scale, writes BENCH_mix.json."""
+    res = run_mix_bench()
+    check_result(res)
+    return res
+
+
+ALL = [mix_bench_artifact]
+
+
+def main(argv=None) -> None:
+    _sys_path()
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="time-compressed mixes; assert the harness emits "
+                         "valid JSON (CI)")
+    ap.add_argument("--time-scale", type=float, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        out = args.out or SMOKE_OUT
+        res = run_mix_bench(time_scale=args.time_scale or 0.4, out_path=out)
+        with open(out) as f:   # must round-trip as valid JSON
+            check_result(json.load(f))
+        print(f"mix_bench --smoke PASS ({res['derived']}) wrote {out}")
+        return
+
+    res = run_mix_bench(time_scale=args.time_scale or 1.0,
+                        out_path=args.out or OUT)
+    check_result(res)
+    print(json.dumps({k: v for k, v in res.items() if k != "machine"},
+                     indent=1, default=float))
+    print(f"wrote {args.out or OUT}")
+
+
+if __name__ == "__main__":
+    main()

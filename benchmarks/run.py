@@ -18,7 +18,8 @@ def main() -> None:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     from benchmarks import (paper_artifacts, kernel_bench, sim_bench,
                             plan_bench, serve_bench, fleet_bench,
-                            label_bench, chaos_bench, online_bench)
+                            label_bench, chaos_bench, online_bench,
+                            mix_bench)
 
     results = []
     print("name,seconds,derived")
@@ -26,7 +27,7 @@ def main() -> None:
                + list(sim_bench.ALL) + list(plan_bench.ALL)
                + list(serve_bench.ALL) + list(fleet_bench.ALL)
                + list(label_bench.ALL) + list(chaos_bench.ALL)
-               + list(online_bench.ALL)):
+               + list(online_bench.ALL) + list(mix_bench.ALL)):
         t0 = time.time()
         res = fn()
         dt = time.time() - t0

@@ -162,6 +162,21 @@ class NodeTelemetry:
                              self.jitter_sigma[ids].copy(),
                              self.relay_hub[ids].copy())
 
+    def with_load(self, load: Sequence[float]) -> "NodeTelemetry":
+        """Fold a colocated tenant's per-machine utilization (0..1, clipped
+        at 0.95) into the observed slowdown: a machine whose capacity is 60%
+        claimed by another workload looks 2.5x slower to the labeler, the
+        same capacity-share stretch a fair scheduler would produce. This is
+        how the training labeler 'sees' serve load (and vice versa) on a
+        shared fleet."""
+        load = np.clip(np.asarray(load, np.float32), 0.0, 0.95)
+        if len(load) != len(self.slowdown):
+            raise ValueError(f"load has {len(load)} entries for "
+                             f"{len(self.slowdown)} machines")
+        return NodeTelemetry(self.slowdown / (1.0 - load),
+                             self.jitter_sigma.copy(),
+                             self.relay_hub.copy())
+
     def extended(self, k: int = 1) -> "NodeTelemetry":
         """Telemetry for a fleet that grew by ``k`` (joined machines start
         with clean signals — nothing has been observed about them yet)."""

@@ -209,11 +209,19 @@ class HulkPlacement:
     name = "hulk"
 
     def __init__(self, graph: ClusterGraph, model: ServeModel,
-                 n_replicas: int, params, cfg):
+                 n_replicas: int, params, cfg, external_load=None):
         self.graph = graph
         self.model = model
         self.params = params
         self.cfg = cfg
+        # per-machine fraction of capacity claimed by a colocated tenant
+        # (0..1, e.g. a training group pinned on the machine) — the router's
+        # side of the multi-tenant negotiation: scores rank machines by the
+        # decode throughput *left over* after the other tenant's claim, so
+        # replicas land off the contended hosts when the fleet has room
+        self.external_load = (None if external_load is None
+                              else np.clip(np.asarray(external_load, float),
+                                           0.0, 1.0))
         self.task = serve_task_for(model, n_replicas)
         self.n_replicas = n_replicas
         self.runtime = ElasticRuntime(graph, [self.task], params, cfg)
@@ -235,6 +243,12 @@ class HulkPlacement:
         prob = (p / p.sum(axis=1, keepdims=True))[:, 0]  # serve class = 0
         cap = np.array([self.model.decode_tokens_per_s(m.tflops)
                         for m in graph.machines])
+        if self.external_load is not None:
+            # machines that joined after construction carry no claim
+            headroom = np.ones(len(cap))
+            k = min(len(cap), len(self.external_load))
+            headroom[:k] = 1.0 - 0.95 * self.external_load[:k]
+            cap = cap * headroom
         # floor the probability so capacity stays the primary term when the
         # GNN is indifferent; the GNN then up-weights machines Algorithm 1
         # wants in the serve group and down-weights poorly connected ones

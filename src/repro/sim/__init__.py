@@ -12,24 +12,33 @@ simulated per-step time of each parallelism strategy equals the analytic
 the zero-contention limits of ``sim.network.NetworkModel``) — asserted in
 ``tests/test_sim.py``.
 """
+from repro.sim.colocate import (TenantCompute, canonical_colocated,
+                                check_colocated_invariants, run_colocated)
 from repro.sim.compute import ComputeModel, JitterConfig
 from repro.sim.engine import Simulator
 from repro.sim.evaluate import (FleetSimulation, SimResult, comparison_table,
                                 evaluate_all, evaluate_scenario,
                                 observed_telemetry, observed_telemetry_live,
                                 run_drift_scenario, simulate_single)
+from repro.sim.generate import (ENVELOPE, approx_params, check_scenario,
+                                declared_invariants, generate_scenario,
+                                generated_scenarios)
 from repro.sim.faults import (FaultPlan, GrayFailure, LinkDegradation,
                               MachineCrash, MachineFlap, RegionPartition,
                               RegionPreemption, compile_plan,
                               plan_from_fracs)
 from repro.sim.network import NetworkModel
-from repro.sim.scenarios import (DRIFT_SCENARIOS, SCENARIOS, SERVE_SCENARIOS,
-                                 DriftScenario, Scenario, ServeScenario,
+from repro.sim.scenarios import (COLOCATED_SCENARIOS, DRIFT_SCENARIOS,
+                                 SCENARIOS, SERVE_SCENARIOS,
+                                 ColocatedScenario, DriftScenario, Scenario,
+                                 ServeScenario, get_colocated_scenario,
                                  get_drift_scenario, get_scenario,
-                                 get_serve_scenario, register, register_drift,
-                                 register_serve, temporary_registration,
-                                 unregister, unregister_drift,
-                                 unregister_serve)
+                                 get_serve_scenario, register,
+                                 register_colocated, register_drift,
+                                 register_scenario, register_serve,
+                                 temporary_registration, unregister,
+                                 unregister_colocated, unregister_drift,
+                                 unregister_scenario, unregister_serve)
 from repro.sim.workload import ServeExecutor
 
 __all__ = [
@@ -39,6 +48,13 @@ __all__ = [
     "get_serve_scenario", "ServeExecutor",
     "DriftScenario", "DRIFT_SCENARIOS", "register_drift",
     "get_drift_scenario", "unregister_drift", "run_drift_scenario",
+    "ColocatedScenario", "COLOCATED_SCENARIOS", "register_colocated",
+    "get_colocated_scenario", "unregister_colocated",
+    "register_scenario", "unregister_scenario",
+    "run_colocated", "canonical_colocated", "check_colocated_invariants",
+    "TenantCompute",
+    "generate_scenario", "generated_scenarios", "check_scenario",
+    "declared_invariants", "approx_params", "ENVELOPE",
     "unregister", "unregister_serve", "temporary_registration",
     "FaultPlan", "MachineCrash", "RegionPreemption", "LinkDegradation",
     "RegionPartition", "GrayFailure", "MachineFlap",

@@ -217,7 +217,12 @@ def canonical_fleet(res, controller=None) -> str:
                          if d["finish_s"] is not None else None,
                          "failed": bool(d["failed"])}
                      for n, d in sorted(res.per_task.items())},
-        "replans": [{"at_s": float(r["at_s"]), "reason": r["reason"]}
+        # fault_fracs-driven kills/rejoins log no "reason" — carry whichever
+        # identifying key the entry has so every replan shape canonicalizes
+        "replans": [{"at_s": float(r["at_s"]),
+                     "reason": r.get("reason",
+                                     "killed" if "killed" in r
+                                     else "rejoined")}
                     for r in res.replans],
     }
     if controller is not None:

@@ -294,7 +294,30 @@ class FleetSimulation:
                  fault_fracs: Sequence[float] = (),
                  kills_per_fault: int = 1, fault_plan=None,
                  steps: int = 3, seed: int = 0, concurrent: bool = True,
-                 net_solver: str = "fast", obs=None, controller=None):
+                 net_solver: str = "fast", obs=None, controller=None,
+                 sim=None, net=None, compute=None):
+        # shared-fleet (colocated) mode: an externally owned engine + data /
+        # compute planes replace the privately built ones, so a second tenant
+        # (a ServeExecutor) can contend on the same links and machines. The
+        # paths that tear the models down and rebuild them — crash re-plans,
+        # the online controller, traffic capacity scaling — would yank the
+        # fabric out from under the other tenant, so they are rejected here.
+        self._shared = any(m is not None for m in (sim, net, compute))
+        if self._shared:
+            if sim is None or net is None or compute is None:
+                raise ValueError("shared-fleet mode needs all of "
+                                 "sim=, net= and compute=")
+            if controller is not None:
+                raise ValueError("shared-fleet mode does not support a "
+                                 "controller (commits rebuild the data plane)")
+            if fault_plan is not None or fault_fracs:
+                raise ValueError("shared-fleet mode takes no fault plan: "
+                                 "inject faults through the executor that "
+                                 "owns routing (see sim.colocate)")
+            if traffic is not None:
+                raise ValueError("shared-fleet mode takes no traffic "
+                                 "builder: bake capacity_scale into the "
+                                 "shared NetworkModel instead")
         self.graph = graph
         self.tasks = list(tasks)
         self.placer = placer
@@ -321,7 +344,10 @@ class FleetSimulation:
         if controller is not None and (obs is None or not obs.enabled):
             obs = obs_mod.Recorder()
         self.obs = obs if obs is not None else obs_mod.NULL
-        self.sim = Simulator(obs=self.obs)
+        self.sim = sim if sim is not None else Simulator(obs=self.obs)
+        if self._shared:
+            self.net = net
+            self.compute = compute
         self.migrations_in_flight = 0
         self.placements: dict[str, Placement] = {}
         self.runs = {t.name: _TaskRun(task=t) for t in self.tasks}
@@ -357,6 +383,12 @@ class FleetSimulation:
         return max(times) if self.concurrent else sum(times)
 
     def _build_models(self, horizon: float) -> None:
+        if self._shared:
+            # the shared planes are owned by the colocated host — only the
+            # derived read-side state is (re)built here
+            self._comm = cm.make_comm(self.graph, self.comm_model)
+            self._stragglers = self.compute.stragglers()
+            return
         scale = self.traffic(self.graph, horizon) if self.traffic else None
         self.net = NetworkModel(self.graph, self.comm_model,
                                 capacity_scale=scale,
@@ -709,7 +741,11 @@ class FleetSimulation:
         return {"moves": len(moves), "bytes": float(total_bytes)}
 
     # -- entry point --------------------------------------------------------
-    def run(self) -> SimResult:
+    def start(self) -> None:
+        """Place the tasks, build (or adopt) the models and schedule the
+        first steps + fault plan — everything ``run()`` does before draining
+        the heap. Split out so a colocated host can start several tenants on
+        one shared ``Simulator`` before running it."""
         if self.controller is not None:
             self.controller.bind(self)
         self.placements = self.placer.place(self.graph)
@@ -728,8 +764,13 @@ class FleetSimulation:
                                                horizon, self.seed):
                 self.sim.schedule(act.t, self._apply_fault, act,
                                   pin_epoch=False)
-        self.sim.run()
 
+    def run(self) -> SimResult:
+        self.start()
+        self.sim.run()
+        return self.finalize()
+
+    def finalize(self) -> SimResult:
         per_task = {}
         finishes = []
         for name, run in self.runs.items():

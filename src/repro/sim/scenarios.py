@@ -2,8 +2,23 @@
 
 A scenario bundles a fleet builder, the task set, the comm model, jitter /
 straggler settings, a fault schedule (fractions of the estimated run length)
-and an optional time-varying traffic profile. Register new ones with
-``register`` (see README "Adding a scenario"):
+and an optional time-varying traffic profile. Four scenario kinds live in
+four registries:
+
+* ``Scenario``          — training runs (``sim.evaluate``), ``SCENARIOS``;
+* ``ServeScenario``     — request serving (``serve.evaluate``),
+  ``SERVE_SCENARIOS``;
+* ``DriftScenario``     — training under drift with an online controller
+  (``sim.evaluate.run_drift_scenario``), ``DRIFT_SCENARIOS``;
+* ``ColocatedScenario`` — a training tenant AND a serving tenant contending
+  on one shared fleet (``sim.colocate``), ``COLOCATED_SCENARIOS``.
+
+``register_scenario`` / ``unregister_scenario`` dispatch on the scenario's
+type — one code path for every kind, including generated ones
+(``sim.generate``) — and raise ``TypeError`` on anything that is not a
+scenario. The per-kind helpers (``register``, ``register_serve``, ...) are
+thin wrappers kept for call-site readability. See README "Adding a
+scenario":
 
     from repro.sim import scenarios as sc
     sc.register(sc.Scenario(name="my_case", description="...",
@@ -43,6 +58,10 @@ SIM_TASKS: tuple[cm.ModelTask, ...] = (
 TrafficBuilder = Callable[[ClusterGraph, float], Callable[[int, float], float]]
 
 
+# ---------------------------------------------------------------------------
+# Scenario kinds (all four defined up front so the registry dispatch below
+# can cover them with one table)
+# ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     name: str
@@ -60,14 +79,159 @@ class Scenario:
     steps: int = 3
 
 
+@dataclasses.dataclass(frozen=True)
+class ServeScenario:
+    name: str
+    description: str
+    fleet: Callable[[int], "ClusterGraph"]
+    traffic: Callable[["ClusterGraph"], "object"]   # graph -> TrafficConfig
+    model: "object"                                 # serve.costs.ServeModel
+    n_replicas: int = 3
+    max_batch: int = 8
+    prefill_chunk: int = 256
+    slo_s: float = 20.0
+    comm_model: str = "alphabeta"
+    jitter: JitterConfig = JitterConfig()
+    autoscale: Optional[object] = None              # AutoscaleConfig
+    spares: tuple = ()                              # Machines to provision
+    fault_fracs: tuple[float, ...] = ()
+    kills_per_fault: int = 1
+    # declarative fault injection (sim.faults.FaultPlan); supersedes the
+    # fault_fracs shim above when set
+    fault_plan: Optional[object] = None
+    # serving resilience (serve.resilience.ResilienceConfig); None = the
+    # legacy blind-reroute path
+    resilience: Optional[object] = None
+    max_routes: Optional[int] = None                # None = executor default
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftScenario:
+    name: str
+    description: str
+    fleet: Callable[[int], ClusterGraph]
+    controller: ControllerConfig
+    tasks: tuple[cm.ModelTask, ...] = SIM_TASKS
+    comm_model: str = "alphabeta"
+    jitter: JitterConfig = JitterConfig()
+    fault_plan: Optional[object] = None      # sim.faults.FaultPlan
+    traffic: Optional[TrafficBuilder] = None
+    steps: int = 8
+    # which GNN scores candidate plans online: "sim" = telemetry-aware v2
+    # labels (sees live slowdowns), "analytic" = v1 (cheap; the controller's
+    # greedy polish supplies the drift-awareness)
+    label_mode: str = "analytic"
+
+
+@dataclasses.dataclass(frozen=True)
+class ColocatedScenario:
+    """A training tenant and a serving tenant on ONE contended fleet.
+
+    ``sim.colocate.run_colocated`` runs a ``FleetSimulation`` and a
+    ``ServeExecutor`` on the same ``Simulator``/``NetworkModel``/
+    ``ComputeModel``: training activation/sync transfers and serve
+    request/response transfers fair-share the same links, and the two
+    placements see each other's load — the serve router through a
+    per-machine ``external_load`` claim, the training labeler through
+    ``NodeTelemetry.with_load`` (v2 features, ``label_mode="sim"``).
+
+    Fault plans here are limited to environmental injectors (gray
+    slowdowns, link degradation): crash-style faults rebuild the training
+    data plane, which cannot be yanked out from under the serving tenant.
+    """
+    name: str
+    description: str
+    fleet: Callable[[int], ClusterGraph]
+    traffic: Callable[["ClusterGraph"], "object"]    # graph -> TrafficConfig
+    model: "object"                                  # serve.costs.ServeModel
+    tasks: tuple[cm.ModelTask, ...] = ()             # training tenant
+    n_replicas: int = 3
+    max_batch: int = 8
+    prefill_chunk: int = 256
+    slo_s: float = 20.0
+    comm_model: str = "alphabeta"
+    jitter: JitterConfig = JitterConfig()
+    steps: int = 2                                   # training steps per task
+    # GNN flavour for the training placement: "analytic" (v1 features,
+    # load-blind) or "sim" (v2 telemetry features — sees the serve claim)
+    label_mode: str = "analytic"
+    # environmental-only fault plan, injected through the serving executor
+    # (the routing owner); validated by sim.colocate
+    fault_plan: Optional[object] = None
+    resilience: Optional[object] = None
+    max_routes: Optional[int] = None
+
+
 SCENARIOS: dict[str, Scenario] = {}
+SERVE_SCENARIOS: dict[str, ServeScenario] = {}
+DRIFT_SCENARIOS: dict[str, DriftScenario] = {}
+COLOCATED_SCENARIOS: dict[str, ColocatedScenario] = {}
+
+# type -> (registry, human label): the ONE dispatch table every
+# registration helper goes through
+_REGISTRIES: tuple[tuple[type, dict, str], ...] = (
+    (Scenario, SCENARIOS, "scenario"),
+    (ServeScenario, SERVE_SCENARIOS, "serve scenario"),
+    (DriftScenario, DRIFT_SCENARIOS, "drift scenario"),
+    (ColocatedScenario, COLOCATED_SCENARIOS, "colocated scenario"),
+)
 
 
-def register(scenario: Scenario) -> Scenario:
-    if scenario.name in SCENARIOS:
-        raise ValueError(f"scenario {scenario.name!r} already registered")
-    SCENARIOS[scenario.name] = scenario
+def _registry_of(scenario) -> tuple[dict, str]:
+    for cls, registry, label in _REGISTRIES:
+        if isinstance(scenario, cls):
+            return registry, label
+    raise TypeError(
+        f"not a scenario: {type(scenario).__name__} (registrable kinds: "
+        + ", ".join(cls.__name__ for cls, _, _ in _REGISTRIES) + ")")
+
+
+def register_scenario(scenario):
+    """Register any scenario kind in its registry (dispatch on type);
+    raises ``TypeError`` for non-scenarios and ``ValueError`` on a name
+    collision within the kind's registry."""
+    registry, label = _registry_of(scenario)
+    if scenario.name in registry:
+        raise ValueError(f"{label} {scenario.name!r} already registered")
+    registry[scenario.name] = scenario
     return scenario
+
+
+def unregister_scenario(scenario) -> None:
+    """Remove any scenario kind (instance or, for back-compat, a plain name
+    — names are only searched in the training registry). Unknown names are
+    a no-op so test teardown never fails; non-scenario objects raise
+    ``TypeError`` just like ``register_scenario``."""
+    if isinstance(scenario, str):
+        SCENARIOS.pop(scenario, None)
+        return
+    registry, _ = _registry_of(scenario)
+    registry.pop(scenario.name, None)
+
+
+def _get_from(registry: dict, label: str, name: str):
+    try:
+        return registry[name]
+    except KeyError:
+        raise KeyError(f"unknown {label} {name!r}; "
+                       f"known: {sorted(registry)}") from None
+
+
+# per-kind wrappers (call-site readability + the historical API)
+def register(scenario: Scenario) -> Scenario:
+    return register_scenario(scenario)
+
+
+def register_serve(scenario: ServeScenario) -> ServeScenario:
+    return register_scenario(scenario)
+
+
+def register_drift(scenario: DriftScenario) -> DriftScenario:
+    return register_scenario(scenario)
+
+
+def register_colocated(scenario: ColocatedScenario) -> ColocatedScenario:
+    return register_scenario(scenario)
 
 
 def unregister(name: str) -> None:
@@ -76,39 +240,53 @@ def unregister(name: str) -> None:
     SCENARIOS.pop(name, None)
 
 
+def unregister_serve(name: str) -> None:
+    """Remove a serve scenario (see ``unregister``)."""
+    SERVE_SCENARIOS.pop(name, None)
+
+
+def unregister_drift(name: str) -> None:
+    """Remove a drift scenario (see ``unregister``)."""
+    DRIFT_SCENARIOS.pop(name, None)
+
+
+def unregister_colocated(name: str) -> None:
+    """Remove a colocated scenario (see ``unregister``)."""
+    COLOCATED_SCENARIOS.pop(name, None)
+
+
 def get_scenario(name: str) -> Scenario:
-    try:
-        return SCENARIOS[name]
-    except KeyError:
-        raise KeyError(f"unknown scenario {name!r}; "
-                       f"known: {sorted(SCENARIOS)}") from None
+    return _get_from(SCENARIOS, "scenario", name)
+
+
+def get_serve_scenario(name: str) -> ServeScenario:
+    return _get_from(SERVE_SCENARIOS, "serve scenario", name)
+
+
+def get_drift_scenario(name: str) -> DriftScenario:
+    return _get_from(DRIFT_SCENARIOS, "drift scenario", name)
+
+
+def get_colocated_scenario(name: str) -> ColocatedScenario:
+    return _get_from(COLOCATED_SCENARIOS, "colocated scenario", name)
 
 
 @contextlib.contextmanager
 def temporary_registration(*scenarios):
     """Register throwaway scenarios for the duration of a ``with`` block —
-    accepts any mix of ``Scenario``, ``ServeScenario`` and ``DriftScenario``
-    and always removes them on exit, so a failing test can't poison the
-    registries for the rest of the session."""
-    registered: list[tuple[dict, str]] = []
+    accepts any mix of the four scenario kinds (including generated ones)
+    through the same ``register_scenario`` dispatch, and always removes
+    them on exit, so a failing test can't poison the registries for the
+    rest of the session."""
+    registered: list = []
     try:
         for scn in scenarios:
-            if isinstance(scn, DriftScenario):
-                register_drift(scn)
-                registered.append((DRIFT_SCENARIOS, scn.name))
-            elif isinstance(scn, ServeScenario):
-                register_serve(scn)
-                registered.append((SERVE_SCENARIOS, scn.name))
-            elif isinstance(scn, Scenario):
-                register(scn)
-                registered.append((SCENARIOS, scn.name))
-            else:
-                raise TypeError(
-                    f"not a scenario: {type(scn).__name__}")
+            register_scenario(scn)
+            registered.append(scn)
         yield scenarios[0] if len(scenarios) == 1 else scenarios
     finally:
-        for registry, name in registered:
-            registry.pop(name, None)
+        for scn in registered:
+            unregister_scenario(scn)
 
 
 # ---------------------------------------------------------------------------
@@ -167,7 +345,7 @@ def diurnal_traffic(depth: float = 0.6) -> TrafficBuilder:
 
 
 # ---------------------------------------------------------------------------
-# The registry
+# The training registry
 # ---------------------------------------------------------------------------
 register(Scenario(
     name="single_region_lan",
@@ -224,57 +402,6 @@ def _serve_imports():
     from repro.serve.costs import serve_model_from_task
     from repro.serve.traffic import ModelMix, TrafficConfig
     return AutoscaleConfig, serve_model_from_task, ModelMix, TrafficConfig
-
-
-@dataclasses.dataclass(frozen=True)
-class ServeScenario:
-    name: str
-    description: str
-    fleet: Callable[[int], "ClusterGraph"]
-    traffic: Callable[["ClusterGraph"], "object"]   # graph -> TrafficConfig
-    model: "object"                                 # serve.costs.ServeModel
-    n_replicas: int = 3
-    max_batch: int = 8
-    prefill_chunk: int = 256
-    slo_s: float = 20.0
-    comm_model: str = "alphabeta"
-    jitter: JitterConfig = JitterConfig()
-    autoscale: Optional[object] = None              # AutoscaleConfig
-    spares: tuple = ()                              # Machines to provision
-    fault_fracs: tuple[float, ...] = ()
-    kills_per_fault: int = 1
-    # declarative fault injection (sim.faults.FaultPlan); supersedes the
-    # fault_fracs shim above when set
-    fault_plan: Optional[object] = None
-    # serving resilience (serve.resilience.ResilienceConfig); None = the
-    # legacy blind-reroute path
-    resilience: Optional[object] = None
-    max_routes: Optional[int] = None                # None = executor default
-
-
-SERVE_SCENARIOS: dict[str, ServeScenario] = {}
-
-
-def register_serve(scenario: ServeScenario) -> ServeScenario:
-    if scenario.name in SERVE_SCENARIOS:
-        raise ValueError(f"serve scenario {scenario.name!r} already "
-                         "registered")
-    SERVE_SCENARIOS[scenario.name] = scenario
-    return scenario
-
-
-def unregister_serve(name: str) -> None:
-    """Remove a serve scenario (test isolation; unknown names are a no-op
-    so teardown never fails)."""
-    SERVE_SCENARIOS.pop(name, None)
-
-
-def get_serve_scenario(name: str) -> ServeScenario:
-    try:
-        return SERVE_SCENARIOS[name]
-    except KeyError:
-        raise KeyError(f"unknown serve scenario {name!r}; "
-                       f"known: {sorted(SERVE_SCENARIOS)}") from None
 
 
 def _regions_of(graph) -> tuple[str, ...]:
@@ -390,49 +517,6 @@ register_serve(ServeScenario(
 # were calibrated against these exact step times and would be meaningless
 # on a randomly re-drawn fleet.
 # ---------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class DriftScenario:
-    name: str
-    description: str
-    fleet: Callable[[int], ClusterGraph]
-    controller: ControllerConfig
-    tasks: tuple[cm.ModelTask, ...] = SIM_TASKS
-    comm_model: str = "alphabeta"
-    jitter: JitterConfig = JitterConfig()
-    fault_plan: Optional[object] = None      # sim.faults.FaultPlan
-    traffic: Optional[TrafficBuilder] = None
-    steps: int = 8
-    # which GNN scores candidate plans online: "sim" = telemetry-aware v2
-    # labels (sees live slowdowns), "analytic" = v1 (cheap; the controller's
-    # greedy polish supplies the drift-awareness)
-    label_mode: str = "analytic"
-
-
-DRIFT_SCENARIOS: dict[str, DriftScenario] = {}
-
-
-def register_drift(scenario: DriftScenario) -> DriftScenario:
-    if scenario.name in DRIFT_SCENARIOS:
-        raise ValueError(f"drift scenario {scenario.name!r} already "
-                         "registered")
-    DRIFT_SCENARIOS[scenario.name] = scenario
-    return scenario
-
-
-def unregister_drift(name: str) -> None:
-    """Remove a drift scenario (test isolation; unknown names are a no-op
-    so teardown never fails)."""
-    DRIFT_SCENARIOS.pop(name, None)
-
-
-def get_drift_scenario(name: str) -> DriftScenario:
-    try:
-        return DRIFT_SCENARIOS[name]
-    except KeyError:
-        raise KeyError(f"unknown drift scenario {name!r}; "
-                       f"known: {sorted(DRIFT_SCENARIOS)}") from None
-
-
 def drift_lan_fleet(seed: int = 0, n: int = 8) -> ClusterGraph:
     """n identical 8xV100 boxes (256 GB each) on one LAN: GPT-30B's group
     must span two machines and leaves the rest idle — exactly the spare
@@ -528,3 +612,84 @@ register_drift(DriftScenario(
                                 margin=0.10, probation_s=120.0,
                                 probation_regress=0.10),
     label_mode="analytic"))
+
+
+# ---------------------------------------------------------------------------
+# Colocated mixes (PR 10): one training tenant + one serving tenant on the
+# same contended fleet — the regime the ROADMAP's multi-tenant item asks
+# for. Training activation/sync transfers fair-share links with serve
+# request traffic, so serve placement quality now includes *staying off the
+# trainer's machines and links*; these three mixes are the BENCH_mix
+# comparison set (benchmarks/mix_bench.py).
+# ---------------------------------------------------------------------------
+# A 13B trainer: two machines' worth of optimizer state (208 GB) on most
+# classes, so its group claims real capacity but leaves replica room.
+COLO_TASKS: tuple[cm.ModelTask, ...] = (
+    cm.ModelTask("GPT-13B", 13e9, 40, 5120, batch_tokens=32_768,
+                 microbatches=4),
+)
+
+_COLO_HORIZON_S = 240.0
+
+
+def _colo_steady_traffic(graph):
+    _, _, _, TrafficConfig = _serve_imports()
+    return TrafficConfig(
+        rate_rps=5.0, horizon_s=_COLO_HORIZON_S,
+        regions=_regions_of(graph), mixes=_serve_mix())
+
+
+def _colo_burst_traffic(graph):
+    _, _, _, TrafficConfig = _serve_imports()
+    return TrafficConfig(
+        rate_rps=4.0, horizon_s=_COLO_HORIZON_S,
+        regions=_regions_of(graph), mixes=_serve_mix(),
+        burst_factor=5.0,
+        burst_window=(0.35 * _COLO_HORIZON_S, 0.55 * _COLO_HORIZON_S),
+        burst_region="Beijing")
+
+
+def _colo_diurnal_traffic(graph):
+    _, _, _, TrafficConfig = _serve_imports()
+    return TrafficConfig(
+        rate_rps=6.0, horizon_s=_COLO_HORIZON_S,
+        regions=_regions_of(graph), mixes=_serve_mix(),
+        diurnal_depth=0.85)
+
+
+register_colocated(ColocatedScenario(
+    name="colo_wan_steady",
+    description="The paper's eight-region fleet serving steady chat traffic "
+                "while a 13B trainer claims part of the fleet: load-blind "
+                "placement colocates replicas with the trainer and queues "
+                "behind its activation transfers.",
+    fleet=paper_fig1_graph,
+    traffic=_colo_steady_traffic,
+    model=_SERVE_MODEL,
+    tasks=COLO_TASKS,
+    n_replicas=3,
+    slo_s=20.0))
+
+register_colocated(ColocatedScenario(
+    name="colo_burst_contend",
+    description="A 5x Beijing request burst lands while the trainer holds "
+                "its machines: the burst must be shed across replicas that "
+                "are NOT sharing links with the trainer.",
+    fleet=paper_fig1_graph,
+    traffic=_colo_burst_traffic,
+    model=_SERVE_MODEL,
+    tasks=COLO_TASKS,
+    n_replicas=3,
+    slo_s=20.0))
+
+register_colocated(ColocatedScenario(
+    name="colo_hetero_lan",
+    description="Ten heterogeneous machines on one LAN, diurnal chat load + "
+                "the 13B trainer: no WAN latency to hide behind, so the win "
+                "is purely machine choice under contention.",
+    fleet=lambda seed: lan_fleet(seed, n=10),
+    traffic=_colo_diurnal_traffic,
+    model=_SERVE_MODEL,
+    tasks=COLO_TASKS,
+    n_replicas=3,
+    slo_s=15.0))

@@ -282,7 +282,9 @@ class ServeExecutor:
                  fault_plan=None, resilience=None,
                  max_routes: Optional[int] = None,
                  seed: int = 0, run_until_s: Optional[float] = None,
-                 data_plane: str = "fast", obs=None):
+                 data_plane: str = "fast", obs=None,
+                 sim=None, net=None, compute=None,
+                 external_load=None):
         from repro.serve.autoscale import Autoscaler
         from repro.serve.replica import Replica
         from repro.serve.resilience import CircuitBreaker
@@ -304,16 +306,25 @@ class ServeExecutor:
         if data_plane not in ("fast", "reference"):
             raise ValueError(f"unknown data plane {data_plane!r}")
         self.data_plane = data_plane
-        self.sim = Simulator(obs=self.obs)
-        self.net = NetworkModel(graph, comm_model, solver=data_plane,
-                                obs=self.obs)
-        self.compute = ComputeModel(graph, jitter, seed=seed)
+        # shared-fleet (colocated) mode: adopt an externally owned engine +
+        # network/compute planes so a training tenant contends on the same
+        # fabric. The caller (sim.colocate) is responsible for building the
+        # shared NetworkModel with the matching solver/data plane.
+        self._shared = any(m is not None for m in (sim, net, compute))
+        if self._shared and (sim is None or net is None or compute is None):
+            raise ValueError("shared-fleet mode needs all of sim=, net= and "
+                             "compute=")
+        self.sim = sim if sim is not None else Simulator(obs=self.obs)
+        self.net = net if net is not None else NetworkModel(
+            graph, comm_model, solver=data_plane, obs=self.obs)
+        self.compute = compute if compute is not None else ComputeModel(
+            graph, jitter, seed=seed)
 
         if policy == "hulk":
             if params is None or cfg is None:
                 raise ValueError("hulk policy needs trained GNN (params, cfg)")
             self.placement = HulkPlacement(graph, model, n_replicas, params,
-                                           cfg)
+                                           cfg, external_load=external_load)
         else:
             self.placement = StaticPlacement(graph, model, n_replicas)
         self.router = Router(policy, graph, self.net,
@@ -981,7 +992,10 @@ class ServeExecutor:
             self._breaker.record_success(machine)
 
     # -- entry point ---------------------------------------------------------
-    def run(self) -> dict:
+    def start(self) -> None:
+        """Schedule arrivals, the fault plan and the autoscaler — everything
+        ``run()`` does before draining the heap. Split out so a colocated
+        host can start several tenants on one shared ``Simulator``."""
         for req in self.trace:
             self.sim.schedule(req.t_arrival, self._on_arrival, req,
                               pin_epoch=False)
@@ -993,7 +1007,13 @@ class ServeExecutor:
                                   pin_epoch=False)
         if self.autoscaler is not None:
             self.autoscaler.start()
+
+    def run(self) -> dict:
+        self.start()
         self.sim.run(until=self.run_until)
+        return self.collect()
+
+    def collect(self) -> dict:
         if self.autoscaler is not None:
             self.autoscaler.stop()
         all_reps = list(self.replicas.values()) + self.retired

@@ -1,0 +1,177 @@
+"""Property tests for repro.obs.analysis: interval algebra + attribution.
+
+Runs under hypothesis when installed; otherwise tests/_compat.py degrades
+``@given(seed=...)`` to a deterministic parametrize sweep. Each seed drives a
+counter-based RNG that generates the actual random structures, so the two
+modes exercise the same code paths.
+
+Properties pinned:
+  * ``merge_intervals`` / ``subtract_intervals`` / ``clip_intervals`` agree
+    exactly with integer-point set semantics (union, difference,
+    intersection with a window) on arbitrary interval soups, and merge is
+    idempotent and canonical (sorted, disjoint, no zero-length).
+  * ``attribute``: for randomized synthetic Chrome-trace documents —
+    overlapping machine flows, replica lifecycle spans, training steps with
+    compute/comm splits, fault down/recover windows — every lane's five
+    buckets sum to the run window *exactly* (integer µs, zero error).
+"""
+import numpy as np
+
+from _compat import given, settings, st
+from repro.obs import analysis
+from repro.obs.analysis import (BUCKETS, clip_intervals, merge_intervals,
+                                subtract_intervals, total_us)
+from repro.obs.trace import Tracer
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng((0xA11A, int(seed)))
+
+
+def _soup(rng, n_max: int = 12, span: int = 120) -> list:
+    """A random interval soup: unsorted, overlapping, touching, and
+    zero/negative-length entries included on purpose."""
+    n = int(rng.integers(0, n_max + 1))
+    out = []
+    for _ in range(n):
+        a = int(rng.integers(0, span))
+        b = a + int(rng.integers(-2, 18))
+        out.append((a, b))
+    return out
+
+
+def _points(intervals) -> set:
+    """Reference semantics: the set of integer points covered by [a, b)."""
+    pts: set = set()
+    for a, b in intervals:
+        pts.update(range(a, b))
+    return pts
+
+
+# ---------------------------------------------------------------------------
+# Interval algebra vs point-set semantics
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_merge_matches_point_semantics(seed):
+    ivs = _soup(_rng(seed))
+    merged = merge_intervals(ivs)
+    assert _points(merged) == _points(ivs)
+    assert total_us(merged) == len(_points(ivs))
+    # canonical: sorted, disjoint (touching runs unioned), no zero-length
+    assert all(b > a for a, b in merged)
+    assert all(merged[i][1] < merged[i + 1][0]
+               for i in range(len(merged) - 1))
+    assert merge_intervals(merged) == merged
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_subtract_matches_point_semantics(seed):
+    rng = _rng(seed)
+    a = merge_intervals(_soup(rng))
+    b = merge_intervals(_soup(rng))
+    diff = subtract_intervals(a, b)
+    assert _points(diff) == _points(a) - _points(b)
+    assert diff == merge_intervals(diff)        # output stays canonical
+    assert subtract_intervals(a, a) == []
+    assert subtract_intervals(a, []) == a
+    # complement partitions a: (a \ b) and (a \ (a \ b)) tile a exactly
+    inter = subtract_intervals(a, diff)
+    assert _points(inter) == _points(a) & _points(b)
+    assert total_us(diff) + total_us(inter) == total_us(a)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_clip_matches_point_semantics(seed):
+    rng = _rng(seed)
+    a = merge_intervals(_soup(rng))
+    lo = int(rng.integers(0, 120))
+    hi = lo + int(rng.integers(-5, 80))
+    clipped = clip_intervals(a, lo, hi)
+    assert _points(clipped) == _points(a) & set(range(lo, hi))
+    assert all(lo <= x < hi for x in _points(clipped))
+
+
+# ---------------------------------------------------------------------------
+# Attribution: five buckets tile the window exactly on random docs
+# ---------------------------------------------------------------------------
+def _random_doc(seed: int) -> dict:
+    """A synthetic Chrome-trace document with every lane kind the
+    attribution covers, all coordinates drawn from the seed: overlapping
+    machine flows, replica queued/prefill/decode/cold_start lifecycles,
+    training steps with a recorded compute/comm split, and fault
+    down/recover instants (machine- and process-level)."""
+    rng = _rng(seed + 7_000_000)
+    clock = [0.0]
+    tr = Tracer(clock=lambda: clock[0])
+    horizon = float(rng.uniform(20.0, 60.0))
+    for m in range(int(rng.integers(1, 4))):
+        for k in range(int(rng.integers(0, 6))):
+            t0 = float(rng.uniform(0.0, horizon))
+            t1 = t0 + float(rng.uniform(0.0, 12.0))
+            tr.async_span(f"machine/{m}", f"xfer->{k % 3}", f"f{m}.{k}",
+                          t0, t1, cat="net")
+    for m in range(int(rng.integers(1, 4))):
+        t = float(rng.uniform(0.0, 5.0))
+        for k in range(int(rng.integers(0, 5))):
+            q = float(rng.uniform(0.0, 3.0))
+            p = float(rng.uniform(0.1, 2.0))
+            d = float(rng.uniform(0.1, 6.0))
+            tr.async_span(f"replica/{m}", "queued", f"s{m}.{k}", t, t + q,
+                          args={"rid": k})
+            tr.async_span(f"replica/{m}", "prefill", f"s{m}.{k}", t + q,
+                          t + q + p)
+            tr.async_span(f"replica/{m}", "decode", f"s{m}.{k}", t + q + p,
+                          t + q + p + d)
+            t += float(rng.uniform(0.0, 4.0))
+        if rng.uniform() < 0.5:
+            c0 = float(rng.uniform(0.0, horizon))
+            tr.async_span(f"replica/{m}", "cold_start", f"c{m}", c0,
+                          c0 + float(rng.uniform(0.5, 4.0)))
+    for t_i in range(int(rng.integers(0, 3))):
+        t = float(rng.uniform(0.0, 2.0))
+        for s_i in range(int(rng.integers(1, 4))):
+            dur = float(rng.uniform(1.0, 8.0))
+            comp = float(rng.uniform(0.0, dur * 1.2))   # may exceed: clamped
+            tr.span_at(f"task/T{t_i}", f"step{s_i}", t, t + dur,
+                       args={"compute_s": comp})
+            t += dur + float(rng.uniform(0.0, 1.0))
+    for m in range(int(rng.integers(0, 3))):
+        clock[0] = float(rng.uniform(0.0, horizon))
+        tr.instant("faults", "machine_down",
+                   args={"machine": m,
+                         "machine_level": bool(rng.uniform() < 0.5)})
+        if rng.uniform() < 0.7:
+            clock[0] += float(rng.uniform(0.5, 10.0))
+            tr.instant("faults", "recover", args={"machine": m})
+    return tr.to_chrome()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_attribution_buckets_tile_window_exactly(seed):
+    doc = _random_doc(seed)
+    att = analysis.attribute(doc)
+    assert att.wall_us >= 0
+    for lane, buckets in att.lanes.items():
+        assert set(buckets) == set(BUCKETS), lane
+        assert all(v >= 0 for v in buckets.values()), (lane, buckets)
+        assert sum(buckets.values()) == att.wall_us, (lane, buckets)
+    for b in BUCKETS:
+        assert att.totals[b] == sum(lb[b] for lb in att.lanes.values())
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_attribution_deterministic_and_window_clipped(seed):
+    doc = _random_doc(seed)
+    att1, att2 = analysis.attribute(doc), analysis.attribute(doc)
+    assert att1.to_dict() == att2.to_dict()
+    # an explicit sub-window keeps the exact-sum invariant
+    lo, hi = att1.window_us
+    mid = (lo + hi) // 2
+    sub = analysis.attribute(doc, window=(lo, max(mid, lo + 1)))
+    for lane, buckets in sub.lanes.items():
+        assert sum(buckets.values()) == sub.wall_us, (lane, buckets)

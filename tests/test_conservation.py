@@ -1,13 +1,18 @@
 """Request conservation across the serving stack: every offered request is
 completed, dropped (with a reason), or still in flight at the horizon —
 exactly once — for every registered serve scenario on BOTH data planes,
-with the obs counters agreeing with the per-request records."""
+with the obs counters agreeing with the per-request records. The colocated
+executor (serving sharing its fabric with a live training tenant) must keep
+the same ledger: contention stretches latencies, never mints or loses work."""
 import pytest
 
 from repro import obs as obs_mod
 from repro.serve.evaluate import run_serve, summarize
-from repro.sim import SERVE_SCENARIOS, get_serve_scenario
+from repro.sim import (COLOCATED_SCENARIOS, SERVE_SCENARIOS,
+                       get_colocated_scenario, get_serve_scenario,
+                       run_colocated)
 from repro.sim.chaos import check_invariants
+from repro.sim.colocate import check_colocated_invariants
 
 
 @pytest.mark.parametrize("plane", ["fast", "reference"])
@@ -54,3 +59,31 @@ def test_conservation_holds_under_resilience():
     assert res.n_requests == counts["offered"]
     assert res.n_completed + res.n_dropped + res.n_incomplete \
         == res.n_requests
+
+
+@pytest.mark.parametrize("name", sorted(COLOCATED_SCENARIOS))
+def test_conservation_holds_under_colocation(name):
+    """Both tenants on one fabric: the serving ledger stays exactly-once and
+    the training tenant completes every configured step — neither side
+    loses or double-counts work to the other."""
+    scn = get_colocated_scenario(name)
+    result = run_colocated(scn, "least_loaded", seed=0,
+                           train_placer="greedy")
+    check_colocated_invariants(result, scn)
+
+    counts = check_invariants(result["raw"])
+    res = result["serve"]
+    assert counts["offered"] == len(result["raw"]["records"]) > 0
+    assert res.n_requests == counts["offered"]
+    assert res.n_completed == counts["completed"]
+    assert res.n_dropped == counts["dropped"]
+    assert res.n_incomplete == counts["unresolved"]
+    assert res.n_requests == res.n_completed + res.n_dropped \
+        + res.n_incomplete
+    assert sum(res.drops_by_reason.values()) == res.n_dropped
+    assert "unknown" not in res.drops_by_reason
+
+    # training-side conservation: every task ran exactly scn.steps steps
+    for task_name, d in result["train"].per_task.items():
+        assert not d["failed"], task_name
+        assert len(d["step_times"]) == scn.steps, task_name

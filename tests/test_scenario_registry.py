@@ -1,0 +1,127 @@
+"""One registration code path for all four scenario kinds.
+
+``register_scenario`` / ``unregister_scenario`` / ``temporary_registration``
+dispatch on type through the single ``_REGISTRIES`` table: any mix of
+training / serving / drift / colocated scenarios (including generated ones)
+goes through the same calls, lands in the right registry, and non-scenario
+objects raise ``TypeError`` everywhere.
+"""
+import dataclasses
+
+import pytest
+
+from repro.sim import scenarios as sc
+from repro.sim import generate as gen
+
+KINDS = [
+    (sc.Scenario, sc.SCENARIOS, sc.get_scenario,
+     sorted(sc.SCENARIOS)[0]),
+    (sc.ServeScenario, sc.SERVE_SCENARIOS, sc.get_serve_scenario,
+     sorted(sc.SERVE_SCENARIOS)[0]),
+    (sc.DriftScenario, sc.DRIFT_SCENARIOS, sc.get_drift_scenario,
+     sorted(sc.DRIFT_SCENARIOS)[0]),
+    (sc.ColocatedScenario, sc.COLOCATED_SCENARIOS, sc.get_colocated_scenario,
+     sorted(sc.COLOCATED_SCENARIOS)[0]),
+]
+
+
+def _fresh(kind_idx: int, name: str):
+    """A throwaway scenario of the given kind: a registered one, renamed."""
+    _, registry, _, template = KINDS[kind_idx]
+    return dataclasses.replace(registry[template], name=name)
+
+
+@pytest.mark.parametrize("kind_idx", range(len(KINDS)))
+def test_register_unregister_roundtrip_every_kind(kind_idx):
+    cls, registry, get, _ = KINDS[kind_idx]
+    scn = _fresh(kind_idx, f"tmp_registry_{cls.__name__}")
+    before = dict(registry)
+    got = sc.register_scenario(scn)
+    try:
+        assert got is scn
+        assert isinstance(scn, cls)
+        assert get(scn.name) is scn
+        # landed ONLY in its own kind's registry
+        for other_cls, other_registry, _, _ in KINDS:
+            if other_registry is not registry:
+                assert scn.name not in other_registry, other_cls.__name__
+        # name collision within the kind is an error
+        with pytest.raises(ValueError, match="already registered"):
+            sc.register_scenario(dataclasses.replace(scn))
+    finally:
+        sc.unregister_scenario(scn)
+    assert dict(registry) == before
+    with pytest.raises(KeyError, match="unknown"):
+        get(scn.name)
+    sc.unregister_scenario(scn)   # unknown name: no-op, never raises
+
+
+@pytest.mark.parametrize("kind_idx", range(len(KINDS)))
+def test_per_kind_wrappers_share_the_code_path(kind_idx):
+    register_fns = [sc.register, sc.register_serve, sc.register_drift,
+                    sc.register_colocated]
+    unregister_fns = [sc.unregister, sc.unregister_serve, sc.unregister_drift,
+                      sc.unregister_colocated]
+    _, registry, get, _ = KINDS[kind_idx]
+    scn = _fresh(kind_idx, f"tmp_wrapper_{kind_idx}")
+    register_fns[kind_idx](scn)
+    try:
+        assert get(scn.name) is scn
+    finally:
+        unregister_fns[kind_idx](scn.name)
+    assert scn.name not in registry
+
+
+@pytest.mark.parametrize("bogus", [object(), 42, None, {"name": "x"},
+                                   "just_a_string"])
+def test_register_rejects_non_scenarios(bogus):
+    with pytest.raises(TypeError, match="not a scenario"):
+        sc.register_scenario(bogus)
+
+
+def test_unregister_rejects_non_scenarios():
+    with pytest.raises(TypeError, match="not a scenario"):
+        sc.unregister_scenario(42)
+    # back-compat: a plain string is a training-registry name, not an error
+    sc.unregister_scenario("never_registered_name")
+
+
+def test_temporary_registration_mixes_all_kinds():
+    scns = tuple(_fresh(i, f"tmp_mix_{i}") for i in range(len(KINDS)))
+    with sc.temporary_registration(*scns) as got:
+        assert got == scns
+        assert scns[0].name in sc.SCENARIOS
+        assert scns[1].name in sc.SERVE_SCENARIOS
+        assert scns[2].name in sc.DRIFT_SCENARIOS
+        assert scns[3].name in sc.COLOCATED_SCENARIOS
+    for scn, (_, registry, _, _) in zip(scns, KINDS):
+        assert scn.name not in registry
+
+
+def test_temporary_registration_cleans_up_on_error():
+    scns = tuple(_fresh(i, f"tmp_err_{i}") for i in range(len(KINDS)))
+    with pytest.raises(RuntimeError, match="boom"):
+        with sc.temporary_registration(*scns):
+            raise RuntimeError("boom")
+    for scn, (_, registry, _, _) in zip(scns, KINDS):
+        assert scn.name not in registry
+    # a mid-registration failure (duplicate in the middle of the batch)
+    # unwinds the ones already registered
+    dup = dataclasses.replace(KINDS[0][1][KINDS[0][3]])   # collides
+    with pytest.raises(ValueError, match="already registered"):
+        with sc.temporary_registration(scns[1], dup, scns[2]):
+            pass
+    assert scns[1].name not in sc.SERVE_SCENARIOS
+    assert scns[2].name not in sc.DRIFT_SCENARIOS
+
+
+def test_generated_scenarios_register_through_the_same_path():
+    batch = gen.generated_scenarios(6, base_seed=123)
+    assert len(batch) == 6
+    with sc.temporary_registration(*batch):
+        for scn in batch:
+            registry, _ = sc._registry_of(scn)
+            assert registry[scn.name] is scn
+    for scn in batch:
+        registry, _ = sc._registry_of(scn)
+        assert scn.name not in registry
